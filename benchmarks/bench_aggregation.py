@@ -1,0 +1,52 @@
+"""Paper Figs 5–8: aggregation strategies on the synthetic benchmark.
+
+Fig 5/6: write/read throughput, 3 strategies × rank scaling.
+Fig 7/8: write/read throughput, 3 strategies × per-rank data size sweep.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Report, fresh_dir, synthetic_layout
+from benchmarks.crbench import bench_read, bench_write
+
+STRATEGIES = ["file_per_tensor", "file_per_process", "single_file"]
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    per_rank = (8 << 30) if full_scale else (512 << 20)
+    ranks_sweep = [1, 2, 4] if not quick else [1, 2]
+    size_sweep = ([128 << 20, 512 << 20, 2 << 30, 8 << 30] if full_scale
+                  else [32 << 20, 128 << 20, 512 << 20])
+    if quick:
+        per_rank = 128 << 20
+        size_sweep = [32 << 20, 128 << 20]
+
+    rep = Report("bench_aggregation")
+    print("== Fig 5/6: strategies x ranks ==")
+    for strategy in STRATEGIES:
+        for ranks in ranks_sweep:
+            lay = synthetic_layout(ranks, per_rank)
+            d = fresh_dir(f"agg_{strategy}_{ranks}")
+            w = bench_write(lay, "aggregated", {"strategy": strategy}, d)
+            r = bench_read(lay, "aggregated", {"strategy": strategy}, d)
+            rep.add(fig="5-6", strategy=strategy, ranks=ranks,
+                    per_rank_mb=per_rank >> 20, write_gbps=w["gbps"],
+                    read_gbps=r["gbps"], files=w["files"],
+                    write_reqs=w["io_requests"])
+    print("== Fig 7/8: strategies x data size (4 ranks) ==")
+    ranks = 2 if quick else 4
+    for strategy in STRATEGIES:
+        for size in size_sweep:
+            lay = synthetic_layout(ranks, size)
+            d = fresh_dir(f"aggsz_{strategy}_{size >> 20}")
+            w = bench_write(lay, "aggregated", {"strategy": strategy}, d)
+            r = bench_read(lay, "aggregated", {"strategy": strategy}, d)
+            rep.add(fig="7-8", strategy=strategy, ranks=ranks,
+                    per_rank_mb=size >> 20, write_gbps=w["gbps"],
+                    read_gbps=r["gbps"])
+    return rep.save()
+
+
+if __name__ == "__main__":
+    import sys
+    run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

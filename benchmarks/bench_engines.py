@@ -1,0 +1,43 @@
+"""Paper Figs 11–12, 15–16: C/R engines vs the ideal aggregated baseline on
+the synthetic workload (single aggregated file where the engine supports it).
+
+aggregated = the paper's ideal liburing baseline (ours, productionized)
+datastates = DataStates-LLM-faithful     snapshot = TorchSnapshot-faithful
+torchsave  = default torch.save
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Report, fresh_dir, synthetic_layout
+from benchmarks.crbench import bench_read, bench_write
+
+ENGINES = ["aggregated", "datastates", "snapshot", "torchsave"]
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    per_rank = (8 << 30) if full_scale else (512 << 20)
+    ranks_sweep = [1, 2, 4]
+    if quick:
+        per_rank = 128 << 20
+        ranks_sweep = [1, 2]
+    # snapshot chunking at paper scale is 512MB; scale with data volume
+    chunk = (512 << 20) if full_scale else (32 << 20)
+
+    rep = Report("bench_engines")
+    for engine in ENGINES:
+        for ranks in ranks_sweep:
+            lay = synthetic_layout(ranks, per_rank)
+            d = fresh_dir(f"eng_{engine}_{ranks}")
+            cfg = {"chunk_bytes": chunk}
+            w = bench_write(lay, engine, cfg, d)
+            r = bench_read(lay, engine, cfg, d)
+            rep.add(engine=engine, ranks=ranks, per_rank_mb=per_rank >> 20,
+                    write_gbps=w["gbps"], read_gbps=r["gbps"],
+                    files=w["files"], write_reqs=w["io_requests"],
+                    read_reqs=r["io_requests"])
+    return rep.save()
+
+
+if __name__ == "__main__":
+    import sys
+    run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

@@ -1,0 +1,58 @@
+"""Paper Figs 17–18: realistic LLM checkpoint layouts.
+
+Fig 17: aggregation strategies on bloom-3b / llama-7b / llama-13b layouts.
+Fig 18: engines on the same layouts (single aggregated file).
+
+The layouts reproduce the paper's heterogeneous compositions (one multi-GB
+optimizer shard + hundreds of KB..MB objects per rank — Fig 4), which is
+exactly where uncoalesced I/O collapses.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Report, fresh_dir, llm_layout
+from benchmarks.crbench import bench_read, bench_write
+
+MODELS = [("bloom-3b", 4), ("llama-7b", 8), ("llama-13b", 16)]
+STRATEGIES = ["file_per_tensor", "file_per_process", "single_file"]
+ENGINES = ["aggregated", "datastates", "snapshot", "torchsave"]
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    # paper scale: full checkpoints (42 GB for 3B over 4 ranks). Scaled:
+    scale = 1.0 if full_scale else 1 / 16
+    models = MODELS if not quick else [("bloom-3b", 2)]
+    if quick:
+        scale = 1 / 64
+
+    rep = Report("bench_llm_realistic")
+    print("== Fig 17: strategies x model layouts ==")
+    for model, ranks in models:
+        ranks = min(ranks, 4)   # 4 procs/node, single node (paper figs 13-18)
+        for strategy in STRATEGIES:
+            lay = llm_layout(model, ranks, scale)
+            d = fresh_dir(f"llm_{model}_{strategy}")
+            w = bench_write(lay, "aggregated", {"strategy": strategy}, d)
+            r = bench_read(lay, "aggregated", {"strategy": strategy}, d)
+            rep.add(fig="17", model=model, ranks=ranks, strategy=strategy,
+                    total_mb=lay.total_bytes >> 20, write_gbps=w["gbps"],
+                    read_gbps=r["gbps"], files=w["files"])
+    print("== Fig 18: engines x model layouts (single aggregated file) ==")
+    chunk = (512 << 20) if full_scale else (32 << 20)
+    for model, ranks in models:
+        ranks = min(ranks, 4)
+        for engine in ENGINES:
+            lay = llm_layout(model, ranks, scale)
+            d = fresh_dir(f"llme_{model}_{engine}")
+            w = bench_write(lay, engine, {"chunk_bytes": chunk}, d)
+            r = bench_read(lay, engine, {"chunk_bytes": chunk}, d)
+            rep.add(fig="18", model=model, ranks=ranks, engine=engine,
+                    total_mb=lay.total_bytes >> 20, write_gbps=w["gbps"],
+                    read_gbps=r["gbps"], write_reqs=w["io_requests"],
+                    read_reqs=r["io_requests"])
+    return rep.save()
+
+
+if __name__ == "__main__":
+    import sys
+    run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

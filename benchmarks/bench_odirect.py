@@ -1,0 +1,36 @@
+"""Paper Figs 9–10: O_DIRECT × backend (liburing vs POSIX), single aggregated
+file, write and cold-read throughput across data sizes."""
+
+from __future__ import annotations
+
+from benchmarks.common import Report, fresh_dir, synthetic_layout
+from benchmarks.crbench import bench_read, bench_write
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    sizes = ([256 << 20, 1 << 30, 4 << 30, 8 << 30] if full_scale
+             else [64 << 20, 256 << 20, 1 << 30])
+    ranks = 4
+    if quick:
+        sizes = [64 << 20, 256 << 20]
+        ranks = 2
+
+    rep = Report("bench_odirect")
+    for backend in ["uring", "posix"]:
+        for direct in [True, False]:
+            for size in sizes:
+                lay = synthetic_layout(ranks, size)
+                d = fresh_dir(f"od_{backend}_{direct}_{size >> 20}")
+                cfg = {"strategy": "single_file", "backend": backend,
+                       "direct": direct}
+                w = bench_write(lay, "aggregated", cfg, d)
+                r = bench_read(lay, "aggregated", cfg, d)
+                rep.add(backend=backend, o_direct=direct,
+                        per_rank_mb=size >> 20, write_gbps=w["gbps"],
+                        read_gbps=r["gbps"])
+    return rep.save()
+
+
+if __name__ == "__main__":
+    import sys
+    run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

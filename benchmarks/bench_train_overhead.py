@@ -1,0 +1,68 @@
+"""Paper Fig 3: checkpoint/restore overhead inside a real training loop.
+
+Trains a reduced model and measures per-iteration time with each engine in
+the loop (sync + async), plus restore time — the end-to-end framing of the
+paper's motivating experiment.
+"""
+
+from __future__ import annotations
+
+import shutil
+import time
+
+import numpy as np
+
+from benchmarks.common import Report, SCRATCH, fresh_dir
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    import jax
+    from repro.configs import get_config
+    from repro.core import CheckpointManager
+    from repro.data import DataConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("stablelm-3b").scaled_down(
+        layers=2 if quick else 4, width_div=16 if quick else 8, vocab=2048)
+    steps = 12 if quick else 30
+    ckpt_every = 4 if quick else 10
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+
+    rep = Report("bench_train_overhead")
+    baseline_wall = None
+    for engine, async_ in [(None, False), ("aggregated", True),
+                           ("aggregated", False), ("datastates", False),
+                           ("snapshot", False), ("torchsave", False)]:
+        d = fresh_dir(f"train_{engine}_{async_}")
+        tcfg = TrainerConfig(steps=steps,
+                             ckpt_every=ckpt_every if engine else 0,
+                             ckpt_dir=d, ckpt_engine=engine or "aggregated",
+                             async_ckpt=async_, log_every=0)
+        t = Trainer(cfg, tcfg, data_cfg=data)
+        out = t.run()
+        label = "no-ckpt" if engine is None else \
+            f"{engine}{'-async' if async_ else ''}"
+        wall = out["wall_seconds"]
+        if engine is None:
+            baseline_wall = wall
+        n_ckpts = steps // ckpt_every if engine else 0
+        over = (wall - baseline_wall) / n_ckpts if n_ckpts else 0.0
+        restore_s = 0.0
+        if engine:
+            t0 = time.perf_counter()
+            with CheckpointManager(d, engine=engine or "aggregated") as mgr:
+                mgr.restore(state_template={
+                    "train": out["state"],
+                    "data": {"data_step": 0}})
+            restore_s = time.perf_counter() - t0
+        t.close()
+        rep.add(config=label, wall_s=wall,
+                per_ckpt_overhead_s=over,
+                ckpt_blocking_s=out["ckpt_blocking_seconds"],
+                restore_s=restore_s)
+    return rep.save()
+
+
+if __name__ == "__main__":
+    import sys
+    run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

@@ -1,0 +1,163 @@
+"""Shared benchmark machinery: multi-rank process harness, cache control,
+and the realistic LLM checkpoint layout generator (paper Fig 4).
+
+Scale note (DESIGN.md §7): Polaris ranks flush 8 GB each to a 650 GB/s Lustre
+PFS; this container has one ~0.65 GB/s filesystem and one core. Default sizes
+are 1/16 of the paper's; ``--full-scale`` restores them. Process counts follow
+the paper's 4-per-node.
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing as mp
+import os
+import shutil
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+SCRATCH = os.environ.get("REPRO_BENCH_DIR", "/root/bench_scratch")
+
+
+def drop_caches() -> bool:
+    """Drop the page cache so reads are cold (needs root; returns success)."""
+    try:
+        os.sync()
+        with open("/proc/sys/vm/drop_caches", "w") as f:
+            f.write("3")
+        return True
+    except OSError:
+        return False
+
+
+def fresh_dir(name: str) -> str:
+    """Scratch dir for one benchmark config. Purges ALL earlier configs'
+    data first — accumulated checkpoints otherwise exhaust the disk."""
+    os.makedirs(SCRATCH, exist_ok=True)
+    for entry in os.listdir(SCRATCH):
+        shutil.rmtree(os.path.join(SCRATCH, entry), ignore_errors=True)
+    d = os.path.join(SCRATCH, name)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+# ---------------------------------------------------------------- layouts
+@dataclass
+class Layout:
+    """A per-rank list of object sizes modeling a checkpoint composition."""
+    name: str
+    ranks: int
+    sizes_per_rank: list[list[int]]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(sum(s) for s in self.sizes_per_rank)
+
+
+def synthetic_layout(ranks: int, per_rank_bytes: int,
+                     region_bytes: int = 64 << 20) -> Layout:
+    """Paper §3.3: one large host buffer per rank, submitted as 64 MB regions."""
+    sizes = []
+    for _ in range(ranks):
+        n, rem = divmod(per_rank_bytes, region_bytes)
+        s = [region_bytes] * n + ([rem] if rem else [])
+        sizes.append(s)
+    return Layout("synthetic", ranks, sizes)
+
+
+def llm_layout(model: str, ranks: int, scale: float = 1.0) -> Layout:
+    """Realistic checkpoint compositions (paper Fig 4): heterogeneous object
+    sizes from KB metadata headers to GB optimizer shards.
+
+    Models: bloom-3b (4 ranks), llama-7b (8), llama-13b (16) following the
+    paper, plus layouts derived from our assigned arch configs."""
+    rng = np.random.default_rng(hash(model) % 2**31)
+    presets = {
+        # (big objects per rank, big size, medium count, medium size,
+        #  small count, small range)
+        "bloom-3b": (1, 8 << 30, 12, 300 << 20, 60, (4 << 10, 5 << 20)),
+        "llama-7b": (1, 6 << 30, 16, 250 << 20, 90, (4 << 10, 5 << 20)),
+        "llama-13b": (1, 5 << 30, 20, 200 << 20, 140, (4 << 10, 5 << 20)),
+    }
+    if model in presets:
+        nb, bs, nm, ms, ns, (lo, hi) = presets[model]
+        sizes = []
+        for _ in range(ranks):
+            s = [int(bs * scale)] * nb
+            s += [int(ms * scale * rng.uniform(0.5, 1.5)) for _ in range(nm)]
+            s += [int(rng.uniform(lo, hi)) for _ in range(ns)]
+            sizes.append(s)
+        return Layout(model, ranks, sizes)
+    # derive from an assigned architecture's actual tensor inventory
+    from repro.configs import get_config
+    from repro.train.steps import init_train_state
+    import jax
+    cfg = get_config(model)
+    shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.key(0), cfg))
+    leaves = jax.tree_util.tree_leaves(shapes)
+    all_sizes = [int(np.prod(l.shape) * l.dtype.itemsize) for l in leaves]
+    per_rank = [max(64, int(s * scale / ranks)) for s in all_sizes]
+    return Layout(model, ranks, [list(per_rank) for _ in range(ranks)])
+
+
+# ------------------------------------------------------------ rank harness
+def _rank_worker(fn, rank, args, barrier, q):
+    try:
+        barrier.wait(timeout=600)
+        t0 = time.perf_counter()
+        out = fn(rank, *args)
+        q.put((rank, time.perf_counter() - t0, out, None))
+    except Exception as e:  # pragma: no cover
+        import traceback
+        q.put((rank, 0.0, None, traceback.format_exc()))
+
+
+def run_ranks(fn, ranks: int, *args) -> tuple[float, list]:
+    """Run fn(rank, *args) in `ranks` processes, barrier-synchronized start.
+
+    Returns (wall_seconds_of_slowest, per-rank outputs)."""
+    if ranks == 1:
+        t0 = time.perf_counter()
+        out = fn(0, *args)
+        return time.perf_counter() - t0, [out]
+    ctx = mp.get_context("spawn")
+    barrier = ctx.Barrier(ranks)
+    q = ctx.Queue()
+    procs = [ctx.Process(target=_rank_worker, args=(fn, r, args, barrier, q))
+             for r in range(ranks)]
+    for p in procs:
+        p.start()
+    results = [q.get(timeout=1200) for _ in procs]
+    for p in procs:
+        p.join()
+    errs = [e for (_, _, _, e) in results if e]
+    if errs:
+        raise RuntimeError(errs[0])
+    wall = max(t for (_, t, _, _) in results)
+    outs = [o for (_, _, o, _) in sorted(results)]
+    return wall, outs
+
+
+# ------------------------------------------------------------------ output
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[dict] = []
+
+    def add(self, **row):
+        row = {k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in row.items()}
+        self.rows.append(row)
+        print("  " + " ".join(f"{k}={v}" for k, v in row.items()), flush=True)
+
+    def save(self):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{self.name}.json")
+        with open(path, "w") as f:
+            json.dump(self.rows, f, indent=1)
+        return path

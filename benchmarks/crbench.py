@@ -1,0 +1,90 @@
+"""Core C/R bench: write/read a Layout through an engine across N rank
+processes, barrier-synchronized, reporting aggregate bandwidth."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Layout, drop_caches, run_ranks
+
+
+def _write_rank(rank: int, layout_sizes, engine_name: str, cfg_kw: dict,
+                ckpt_dir: str, rank_totals):
+    from repro.core.engines import EngineConfig, SaveItem, make_cr_engine
+    sizes = layout_sizes[rank]
+    items = []
+    for i, n in enumerate(sizes):
+        a = np.empty(max(n, 1), np.uint8)
+        a[:: max(n // 64, 1)] = (rank * 131 + i) % 251   # cheap non-zero fill
+        items.append(SaveItem(f"r{rank}/o{i}", a[:n] if n else a[:0],
+                              "uint8", (n,), ((0, n),)))
+    eng = make_cr_engine(engine_name, EngineConfig(**cfg_kw))
+    m = eng.save(ckpt_dir, items, step=0, rank=rank,
+                 num_ranks=len(layout_sizes), rank_totals=rank_totals)
+    with open(os.path.join(ckpt_dir, f"manifest_rank{rank}.json"), "wb") as f:
+        f.write(m.dumps())
+    s = eng.last_save_stats
+    eng.close()
+    return {"bytes": s.logical_bytes, "seconds": s.seconds,
+            "io_requests": s.io_requests, "files": s.files,
+            "alloc_s": s.alloc_seconds, "copy_s": s.copy_seconds}
+
+
+def _read_rank(rank: int, layout_sizes, engine_name: str, cfg_kw: dict,
+               ckpt_dir: str):
+    from repro.core.engines import EngineConfig, ReadReq, make_cr_engine
+    from repro.core.manifest import Manifest
+    with open(os.path.join(ckpt_dir, f"manifest_rank{rank}.json"), "rb") as f:
+        m = Manifest.loads(f.read())
+    reqs = []
+    for key, rec in m.tensors.items():
+        sh = rec.shards[0]
+        reqs.append(ReadReq(key, sh.path, sh.offset, sh.nbytes, obj=key))
+    eng = make_cr_engine(engine_name, EngineConfig(**cfg_kw))
+    out = eng.read(ckpt_dir, reqs)
+    s = eng.last_restore_stats
+    n = sum(v.nbytes for v in out.values())
+    eng.close()
+    return {"bytes": n, "seconds": s.seconds, "io_requests": s.io_requests,
+            "alloc_s": s.alloc_seconds, "copy_s": s.copy_seconds}
+
+
+def rank_totals_for(layout: Layout, cfg_kw: dict):
+    from repro.core.aggregation import ObjectSpec, Strategy, rank_padded_total
+    strat = Strategy.parse(cfg_kw.get("strategy", Strategy.SINGLE_FILE))
+    if strat is not Strategy.SINGLE_FILE:
+        return None
+    return [rank_padded_total([ObjectSpec(f"r{r}/o{i}", n)
+                               for i, n in enumerate(sizes)])
+            for r, sizes in enumerate(layout.sizes_per_rank)]
+
+
+def bench_write(layout: Layout, engine: str, cfg_kw: dict, ckpt_dir: str):
+    cfg_kw = dict(cfg_kw)
+    if layout.ranks > 1:
+        cfg_kw["truncate"] = False   # shared-file mode: no cross-rank trunc
+    totals = rank_totals_for(layout, cfg_kw)
+    wall, outs = run_ranks(_write_rank, layout.ranks, layout.sizes_per_rank,
+                           engine, cfg_kw, ckpt_dir, totals)
+    total = sum(o["bytes"] for o in outs)
+    return {"gbps": total / wall / 1e9, "wall_s": wall, "bytes": total,
+            "io_requests": sum(o["io_requests"] for o in outs),
+            "files": sum(o["files"] for o in outs),
+            "alloc_s": max(o["alloc_s"] for o in outs),
+            "copy_s": max(o["copy_s"] for o in outs)}
+
+
+def bench_read(layout: Layout, engine: str, cfg_kw: dict, ckpt_dir: str,
+               cold: bool = True):
+    if cold:
+        drop_caches()
+    wall, outs = run_ranks(_read_rank, layout.ranks, layout.sizes_per_rank,
+                           engine, cfg_kw, ckpt_dir)
+    total = sum(o["bytes"] for o in outs)
+    return {"gbps": total / wall / 1e9, "wall_s": wall, "bytes": total,
+            "io_requests": sum(o["io_requests"] for o in outs),
+            "alloc_s": max(o["alloc_s"] for o in outs),
+            "copy_s": max(o["copy_s"] for o in outs)}

@@ -1,0 +1,86 @@
+"""§Perf hillclimb for the three chosen dry-run cells.
+
+Cells (rationale in EXPERIMENTS.md §Perf):
+  · qwen3-32b  train_4k — worst roofline MFU among large dense cells
+  · moonshot-v1-16b-a3b train_4k — most collective-bound (MoE, MFU 0.007)
+  · gemma2-9b  prefill_32k — the serving-side collective-bound cell
+
+Method: hypothesis → napkin math over the closed-form terms (sweep the mesh
+split dp×tp, microbatch depth M, Megatron-style sequence parallelism) →
+implement the winning config → re-lower/compile at 256 devices to verify
+sharding coherence + HBM fit → record before/after.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import PEAK_FLOPS, analytic_terms, DRYRUN_JSON
+
+CELLS = [
+    ("qwen3-32b", "train_4k"),
+    ("moonshot-v1-16b-a3b", "train_4k"),
+    ("gemma2-9b", "prefill_32k"),
+]
+
+SPLITS = [(16, 16), (32, 8), (64, 4), (128, 2), (256, 1)]
+
+
+def terms_of(rec, **kw):
+    a = analytic_terms(rec, **kw)
+    return {
+        "compute_s": a["flops_dev"] / PEAK_FLOPS,
+        "memory_s": a["mem_dev"] / 819e9,
+        "collective_s": a["coll_dev"] / 50e9,
+        "mfu": (a["model_flops_dev"] / PEAK_FLOPS)
+        / max(a["flops_dev"] / PEAK_FLOPS, a["mem_dev"] / 819e9,
+              a["coll_dev"] / 50e9),
+    }
+
+
+def sweep(rec):
+    rows = []
+    B = {"train_4k": 256, "prefill_32k": 32}[rec["shape"]]
+    for dp, tp in SPLITS:
+        if dp > B or B % dp:
+            continue   # batch must shard over dp (no context-parallel path)
+        for sp in (False, True):
+            m_opts = ([1, 2, 4, 8, 16] if rec["mode"] == "train" else [1])
+            for M in m_opts:
+                if rec["mode"] == "train" and (B // dp) % M:
+                    continue
+                if rec["mode"] == "train" and B // dp // M < 1:
+                    continue
+                t = terms_of(rec, dp=dp, tp=tp, M=M, seq_parallel=sp)
+                rows.append({"dp": dp, "tp": tp, "M": M, "sp": sp, **t})
+    rows.sort(key=lambda r: -r["mfu"])
+    return rows
+
+
+def main():
+    recs = json.load(open(DRYRUN_JSON))
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+    out = {}
+    for arch, shape in CELLS:
+        rec = by_key[(arch, shape, "16x16")]
+        base = terms_of(rec)
+        rows = sweep(rec)
+        print(f"\n=== {arch} {shape} ===")
+        print(f"baseline dp=16 tp=16 M=auto sp=False: mfu={base['mfu']:.3f} "
+              f"(compute={base['compute_s']:.3f}s "
+              f"coll={base['collective_s']:.3f}s)")
+        for r in rows[:6]:
+            print(f"  dp={r['dp']:<3} tp={r['tp']:<2} M={r['M']:<2} "
+                  f"sp={str(r['sp']):5s} mfu={r['mfu']:.3f} "
+                  f"compute={r['compute_s']:.3f} mem={r['memory_s']:.3f} "
+                  f"coll={r['collective_s']:.3f}")
+        out[f"{arch}/{shape}"] = {"baseline": base, "best": rows[0],
+                                  "sweep_top6": rows[:6]}
+    path = os.path.join(os.path.dirname(DRYRUN_JSON), "hillclimb.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"\n-> {path}")
+
+
+if __name__ == "__main__":
+    main()

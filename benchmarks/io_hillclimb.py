@@ -1,0 +1,100 @@
+"""§Perf I/O hillclimb — hypothesis → change → measure → validate cycles on
+the checkpoint write path (the paper's own metric: sustained write bandwidth
+on a realistic LLM layout).
+
+Each iteration states a hypothesis with napkin math BEFORE measuring; the
+result records confirmed/refuted. Runs on the real filesystem (io_uring +
+O_DIRECT, measured, not simulated).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+
+from benchmarks.common import Report, fresh_dir, llm_layout
+from benchmarks.crbench import bench_write
+
+RANKS = 2          # keep CPU contention low on the 1-core host
+SCALE = 1 / 16
+REPS = 3
+
+
+def measure(cfg_kw: dict, tag: str) -> float:
+    vals = []
+    for rep in range(REPS):
+        lay = llm_layout("bloom-3b", RANKS, SCALE)
+        d = fresh_dir(f"hc_{tag}_{rep}")
+        w = bench_write(lay, "aggregated", cfg_kw, d)
+        vals.append(w["gbps"])
+    return statistics.median(vals)
+
+
+ITERATIONS = [
+    # (name, hypothesis, config-delta)
+    ("baseline",
+     "paper-faithful config: single_file + uring + O_DIRECT + qd64 + "
+     "64MB coalesce. Expected ≈ raw-disk sequential rate minus staging "
+     "overhead (probe measured 0.65 GB/s raw).",
+     {}),
+    ("coalesce_256MB",
+     "H1: 4x larger coalesce groups -> fewer, larger writes. Disk is "
+     "sequential-dominated; fewer request boundaries should gain 5-15% "
+     "(paper: throughput grows to ~2GB batches).",
+     {"coalesce_bytes": 256 << 20, "chunk_bytes": 256 << 20}),
+    ("queue_depth_8",
+     "H2a: shallow queue (8). Single disk, sequential stream -> depth "
+     "beyond a few should not matter; expect ~flat (<5% change).",
+     {"queue_depth": 8}),
+    ("queue_depth_128",
+     "H2b: deep queue (128). Same reasoning; expect flat.",
+     {"queue_depth": 128}),
+    ("buffered",
+     "H3: drop O_DIRECT. Page-cache double buffering + writeback under "
+     "fsync -> paper saw up to 4.8x write LOSS; our earlier probe saw "
+     "~3.8x. Expect large regression.",
+     {"direct": False}),
+    ("posix_backend",
+     "H4: POSIX backend (blocking sequential pwrite, O_DIRECT kept). "
+     "Python's syscall overhead per 64MB request is small -> expect "
+     "mild regression vs uring (no submit/compute overlap).",
+     {"backend": "posix"}),
+    ("sqpoll",
+     "H5: SQPOLL kernel-side submission polling. Saves syscalls but the "
+     "poller thread competes for the SINGLE core with staging memcpy -> "
+     "expect regression here (would help on a many-core host).",
+     {"sqpoll": True}),
+    ("coalesce_1GB",
+     "H6: 1GB coalesce (paper's ~2GB/rank saturation point, scaled). "
+     "Beyond the disk's saturation batch, staging latency before first "
+     "byte hits disk grows -> expect <=5% over 256MB.",
+     {"coalesce_bytes": 1 << 30, "chunk_bytes": 256 << 20}),
+]
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    rep = Report("io_hillclimb")
+    base = None
+    best = (None, 0.0)
+    for name, hypothesis, delta in ITERATIONS:
+        cfg = {"strategy": "single_file", "backend": "uring", "direct": True,
+               "queue_depth": 64, "coalesce_bytes": 64 << 20,
+               "chunk_bytes": 64 << 20}
+        cfg.update(delta)
+        gbps = measure(cfg, name)
+        if base is None:
+            base = gbps
+        delta_pct = (gbps - base) / base * 100
+        rep.add(iteration=name, write_gbps=gbps, delta_vs_baseline_pct=delta_pct,
+                hypothesis=hypothesis[:100])
+        if gbps > best[1]:
+            best = (name, gbps)
+    rep.add(iteration="BEST", write_gbps=best[1],
+            delta_vs_baseline_pct=(best[1] - base) / base * 100,
+            hypothesis=f"winner: {best[0]}")
+    return rep.save()
+
+
+if __name__ == "__main__":
+    run()

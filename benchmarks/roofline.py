@@ -1,0 +1,184 @@
+"""Roofline analysis over the dry-run artifacts (results/dryrun_all.json).
+
+Per (arch × shape × mesh) cell, derive the three per-device roofline terms
+(TPU v5e constants):
+
+    compute    = FLOPs / 197e12          (bf16 peak per chip)
+    memory     = bytes / 819e9           (HBM bandwidth)
+    collective = collective_bytes / 50e9 (ICI per-link)
+
+ACCOUNTING. XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so the
+compiled numbers undercount scanned programs (layer scan × grad-accumulation
+scan) by their trip counts. We therefore report ANALYTIC terms — the standard
+MFU practice (parameter/activation traffic and 6·N·D-style FLOPs are exact
+closed forms) — and scale the HLO-parsed collective volume by the known scan
+trip counts (collectives live in the layer-scan body: TP all-gathers/
+reduce-scatters per layer per microbatch; DP gradient reduce-scatter per
+microbatch). The raw counted-once program stats stay in dryrun_all.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s per link
+
+DRYRUN_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun_all.json")
+
+SHAPES = {  # (seq_len, global_batch)
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+
+def _mesh_sizes(mesh: str):
+    if mesh == "2x16x16":
+        return 512, 32, 16   # devices, dp, tp
+    return 256, 16, 16
+
+
+def _microbatches(batch: int, dp: int) -> int:
+    return max(1, min(16, batch // dp))
+
+
+def analytic_terms(rec: dict, dp: int | None = None, tp: int | None = None,
+                   M: int | None = None, seq_parallel: bool = False) -> dict:
+    """Closed-form per-device FLOPs / HBM bytes / collective bytes.
+
+    ``dp``/``tp``/``M``/``seq_parallel`` override the recorded mesh split for
+    hillclimb what-if evaluation (same formulas, different parallelism)."""
+    from repro.configs import get_config
+    cfg = get_config(rec["arch"])
+    S, B = SHAPES[rec["shape"]]
+    n_dev, dp0, tp0 = _mesh_sizes(rec["mesh"])
+    dp = dp or dp0
+    tp = tp or tp0
+    mode = rec["mode"]
+    N_active = rec["model"]["active_params"]
+    N_total = rec["model"]["params"]
+
+    # ---- FLOPs ----
+    tokens = B * S if mode in ("train", "prefill") else B * 1
+    matmul_flops = (6 if mode == "train" else 2) * N_active * tokens
+    # causal attention scores+values: 2 ops × 2 matmuls × (S²/2) × heads×dim
+    n_attn = sum(1 for k in cfg.block_pattern if k == "attn") \
+        * cfg.num_layers // len(cfg.block_pattern)
+    n_local = sum(1 for k in cfg.block_pattern if k == "attn_local") \
+        * cfg.num_layers // len(cfg.block_pattern)
+    if mode in ("train", "prefill"):
+        ctx_g, ctx_l = S / 2, min(cfg.sliding_window or S, S)
+    else:
+        ctx_g, ctx_l = S, min(cfg.sliding_window or S, S)
+    attn_flops = (2 * 2 * cfg.q_dim * tokens
+                  * (n_attn * ctx_g + n_local * ctx_l))
+    if mode == "train":
+        attn_flops *= 3   # fwd + 2x bwd
+    flops_dev = (matmul_flops + attn_flops) / n_dev
+
+    # ---- HBM bytes ----
+    pbytes = N_total * 2                      # bf16 params
+    if M is None:
+        M = _microbatches(B, dp) if mode == "train" else 1
+    if mode == "train":
+        # per step: local param shard read x(fwd+bwd)x microbatches (FSDP),
+        # grads rw, mu/nu fp32 read+write
+        param_traffic = pbytes / (dp * tp) * (2 * M + 2) + \
+            N_total * 4 / (dp * tp) * 6
+        act = 2 * tokens * cfg.d_model * 2 / n_dev * cfg.num_layers * 4
+        mem_dev = param_traffic + act
+    elif mode == "prefill":
+        act = 2 * tokens * cfg.d_model * 2 / n_dev * cfg.num_layers * 2
+        mem_dev = pbytes / tp + act
+    else:
+        # decode: every param + the whole KV/recurrent cache read once
+        cache = rec["per_device"].get("argument_bytes", 0)
+        mem_dev = pbytes / tp + cache
+    # ---- collectives: closed forms (ring-algorithm per-device traffic) ----
+    L = cfg.num_layers
+    d = cfg.d_model
+    if mode == "train":
+        tokens_mb_local = B // M // dp * S          # tokens/microbatch/device
+        ag_param = 2 * M * (pbytes / tp) * (dp - 1) / dp      # FSDP fwd+bwd
+        rs_grad = M * (4 * N_total / tp) * (dp - 1) / dp      # ZeRO-2
+        # TP: 2 all-reduces/layer (attn-out, ffn-out), x2 in bwd; AR ring
+        # traffic = 2x payload x (tp-1)/tp. Megatron-style sequence
+        # parallelism replaces each AR with RS+AG = 1x payload: halves it.
+        ar_factor = 1.0 if seq_parallel else 2.0
+        tp_act = (L * M * 4 * (ar_factor * tokens_mb_local * d * 2)
+                  * (tp - 1) / tp)
+        if cfg.is_moe:  # dispatch/combine all-to-alls fwd+bwd
+            tp_act += L * M * 4 * (tokens_mb_local * d * 2) * (tp - 1) / tp
+        coll_dev = ag_param + rs_grad + tp_act
+    elif mode == "prefill":
+        tokens_local = B * S // dp
+        coll_dev = L * 2 * (2 * tokens_local * d * 2) * (tp - 1) / tp
+        if cfg.is_moe:
+            coll_dev += L * 2 * (tokens_local * d * 2) * (tp - 1) / tp
+    else:
+        b_local = max(B // dp, 1)
+        coll_dev = L * 4 * (b_local * d * 2) * (tp - 1) / tp
+    return {"flops_dev": flops_dev, "mem_dev": mem_dev, "coll_dev": coll_dev,
+            "model_flops_dev": matmul_flops / n_dev}
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    pd = rec["per_device"]
+    a = analytic_terms(rec)
+    terms = {
+        "compute_s": a["flops_dev"] / PEAK_FLOPS,
+        "memory_s": a["mem_dev"] / HBM_BW,
+        "collective_s": a["coll_dev"] / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    bound = max(terms.values())
+    hlo_flops_once = max(pd["flops"], 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "roofline_mfu": round((a["model_flops_dev"] / PEAK_FLOPS) / bound, 4)
+        if bound else 0.0,
+        "useful_flops_frac": round(a["model_flops_dev"] / a["flops_dev"], 3),
+        "peak_gb": round(pd.get("tpu_adjusted_peak_bytes",
+                                pd["peak_hbm_bytes"]) / 1e9, 2),
+        "raw_peak_gb": round(pd["peak_hbm_bytes"] / 1e9, 2),
+        "collective_mb": round(a["coll_dev"] / 1e6, 1),
+        "hlo_flops_counted_once": hlo_flops_once,
+    }
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    if not os.path.exists(DRYRUN_JSON):
+        print("no dry-run results; run: python -m repro.launch.dryrun --all "
+              "--both-meshes --out results/dryrun_all.json")
+        return None
+    recs = json.load(open(DRYRUN_JSON))
+    rows = [a for a in (analyze(r) for r in recs) if a]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'compute':>9s} "
+           f"{'memory':>9s} {'collect':>9s} {'bound':>11s} {'mfu':>7s} "
+           f"{'useful':>7s} {'peakGB':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['compute_s']:9.5f} {r['memory_s']:9.5f} "
+              f"{r['collective_s']:9.5f} {r['bottleneck']:>11s} "
+              f"{r['roofline_mfu']:7.3f} {r['useful_flops_frac']:7.3f} "
+              f"{r['peak_gb']:7.2f}")
+    out = os.path.join(os.path.dirname(DRYRUN_JSON), "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} cells -> {out}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

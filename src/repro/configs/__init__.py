@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Every assigned architecture is a selectable config; ``get_config(id)`` returns
+the full-size ModelConfig and ``get_config(id).scaled_down()`` the reduced
+same-family smoke-test config.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import (ALL_SHAPES, SHAPES_BY_NAME, ModelConfig,
+                                 ShapeConfig)
+
+_MODULES = {
+    "musicgen-large": "musicgen_large",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "qwen3-32b": "qwen3_32b",
+    "gemma2-9b": "gemma2_9b",
+    "internvl2-26b": "internvl2_26b",
+    "xlstm-350m": "xlstm_350m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def cells(arch_id: str) -> list[tuple[ModelConfig, ShapeConfig, bool]]:
+    """All (config, shape, applicable) dry-run cells for one arch.
+
+    ``applicable`` is False for long_500k on pure full-attention archs
+    (needs sub-quadratic attention — see DESIGN.md §6).
+    """
+    cfg = get_config(arch_id)
+    out = []
+    for shape in ALL_SHAPES:
+        applicable = True
+        if shape.name == "long_500k" and not cfg.sub_quadratic:
+            applicable = False
+        out.append((cfg, shape, applicable))
+    return out

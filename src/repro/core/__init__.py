@@ -1,0 +1,35 @@
+"""repro.core — the paper's contribution: PFS-aware LLM checkpoint/restore.
+
+Layers (bottom-up):
+  uring        raw io_uring syscall binding (the paper's liburing)
+  io_engine    Uring / ThreadPool / Posix backends behind one request API
+  buffers      aligned, pooled, reusable host buffers
+  aggregation  file-per-tensor / file-per-process / single-file planners
+  manifest     tensor→extent metadata with global shard indices
+  engines      aggregated (ours) + datastates/snapshot/torchsave baselines
+  checkpoint   CheckpointManager: async save, atomic commit, elastic restore
+  multilevel   local→PFS two-level flush with hedged straggler mitigation
+"""
+
+from .aggregation import ObjectSpec, Strategy, coalesce, plan_layout
+from .buffers import AlignedBuffer, BufferPool, PAGE
+from .checkpoint import CheckpointManager, SaveMetrics, RestoreMetrics
+from .engines import (AggregatedEngine, CREngine, DataStatesEngine,
+                      EngineConfig, ReadReq, SaveItem, SnapshotEngine,
+                      TorchSaveEngine, make_cr_engine)
+from .io_engine import (IOEngine, IORequest, PosixEngine, ThreadPoolEngine,
+                        UringEngine, make_engine, open_for)
+from .manifest import Manifest, ShardEntry, TensorRecord
+from .multilevel import MultiLevelCheckpointer
+from .uring import IoUring, probe_io_uring
+
+__all__ = [
+    "AggregatedEngine", "AlignedBuffer", "BufferPool", "CREngine",
+    "CheckpointManager", "DataStatesEngine", "EngineConfig", "IOEngine",
+    "IORequest", "IoUring", "Manifest", "MultiLevelCheckpointer",
+    "ObjectSpec", "PAGE", "PosixEngine", "ReadReq", "RestoreMetrics",
+    "SaveItem", "SaveMetrics", "ShardEntry", "SnapshotEngine", "Strategy",
+    "TensorRecord", "ThreadPoolEngine", "TorchSaveEngine", "UringEngine",
+    "coalesce", "make_cr_engine", "make_engine", "open_for", "plan_layout",
+    "probe_io_uring",
+]

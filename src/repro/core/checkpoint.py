@@ -1,0 +1,451 @@
+"""CheckpointManager — the framework-level checkpoint/restore API.
+
+Implements the paper's full C/R pipeline for JAX pytrees:
+
+  save:  tensor extraction + lean-object serialization  (§2 stage 1)
+         → device-to-host transfer                      (§2 stage 2)
+         → engine flush (async-capable)                 (§2 stage 3)
+         → manifest + atomic commit                     (§2 stage 4)
+
+  restore: manifest read → lean object → planned (coalesced) tensor reads
+           → host-to-device with target sharding (elastic resharding).
+
+Versioned layout::
+
+    <root>/step_00000100/manifest.json
+                         data/...
+    <root>/step_00000200/...
+
+A step directory is valid iff its manifest exists (manifests are written last,
+fsync'd, atomically renamed). Crash mid-save leaves a ``.tmp-*`` dir that is
+garbage-collected, never restored from.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from .aggregation import ObjectSpec, Strategy, rank_padded_total
+from .engines import EngineConfig, ReadReq, SaveItem, make_cr_engine
+from .manifest import Manifest, crc32_of
+from .resharding import assemble, dedupe_shards, normalize_index, plan_window
+from .serialization import (LEAN_KEY, TensorStub, as_bytes_view,
+                            deserialize_lean, extract_tensors, iter_stubs,
+                            reinsert_tensors, serialize_lean, tensor_nbytes,
+                            to_numpy_view)
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def step_dir_name(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+def parse_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclass
+class SaveMetrics:
+    step: int
+    total_bytes: int = 0
+    extract_seconds: float = 0.0   # tensor extraction + lean serialization
+    d2h_seconds: float = 0.0       # device→host
+    flush_seconds: float = 0.0     # engine write + fsync
+    commit_seconds: float = 0.0
+    blocking_seconds: float = 0.0  # time the training loop was stalled
+    end_to_end_seconds: float = 0.0
+
+    @property
+    def flush_gbps(self) -> float:
+        return (self.total_bytes / self.flush_seconds / 1e9
+                if self.flush_seconds else 0.0)
+
+
+@dataclass
+class RestoreMetrics:
+    step: int
+    total_bytes: int = 0
+    read_seconds: float = 0.0
+    assemble_seconds: float = 0.0
+    h2d_seconds: float = 0.0
+    end_to_end_seconds: float = 0.0
+
+
+class CheckpointManager:
+    """Versioned, engine-pluggable, async-capable checkpointing for pytrees."""
+
+    def __init__(self, directory: str, engine: str = "aggregated",
+                 config: EngineConfig | None = None, *,
+                 async_save: bool = False, keep: int = 3,
+                 verify_crc: bool = True,
+                 quantize_prefixes: tuple[str, ...] = (),
+                 quantize_min_bytes: int = 1 << 16):
+        """``quantize_prefixes``: tensor keys starting with any of these are
+        int8-packed on save (e.g. ("opt/mu", "opt/nu") halves AdamW-moment
+        flush volume ~4x — see core.quant_codec)."""
+        self.directory = os.path.abspath(directory)
+        os.makedirs(self.directory, exist_ok=True)
+        self.engine_name = engine
+        self.config = config or EngineConfig()
+        if verify_crc:
+            self.config.checksum = True
+        self.engine = make_cr_engine(engine, self.config)
+        self.async_save = async_save
+        self.keep = keep
+        self.verify_crc = verify_crc
+        self.quantize_prefixes = tuple(quantize_prefixes)
+        self.quantize_min_bytes = quantize_min_bytes
+        self._flush_thread: threading.Thread | None = None
+        self._flush_error: BaseException | None = None
+        self.last_save_metrics: SaveMetrics | None = None
+        self.last_restore_metrics: RestoreMetrics | None = None
+        self._gc_tmp()
+
+    # ---------------------------------------------------------------- steps
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and Manifest.exists(os.path.join(self.directory, name)):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _gc_tmp(self) -> None:
+        for name in os.listdir(self.directory):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+
+    def _gc_old(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, step_dir_name(s)),
+                          ignore_errors=True)
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, state, *, rank: int | None = None,
+             num_ranks: int | None = None) -> SaveMetrics:
+        """Checkpoint ``state``. Async mode returns after D2H; flush overlaps."""
+        self.wait()  # at most one checkpoint in flight
+        t_start = time.perf_counter()
+        metrics = SaveMetrics(step=step)
+
+        rank = jax.process_index() if rank is None else rank
+        num_ranks = jax.process_count() if num_ranks is None else num_ranks
+
+        # Stage 1: tensor extraction + lean-object serialization.
+        t0 = time.perf_counter()
+        tensors, lean_tree = extract_tensors(state)
+        lean_blob = serialize_lean(lean_tree)
+        metrics.extract_seconds = time.perf_counter() - t0
+
+        # Stage 2: device→host. Shards owned by this process; DP replicas
+        # deduplicated by replica_id == 0.
+        t0 = time.perf_counter()
+        items: list[SaveItem] = []
+        quantized_keys: list[str] = []
+        for key, t in tensors.items():
+            quant = (any(key.startswith(p) for p in self.quantize_prefixes)
+                     and tensor_nbytes(t) >= self.quantize_min_bytes
+                     and np.dtype(t.dtype).kind == "f")
+            if quant:
+                quantized_keys.append(key)
+            for n, (data, index) in enumerate(self._host_shards(t)):
+                if quant:
+                    from . import quant_codec
+                    payload = np.frombuffer(quant_codec.pack(data), np.uint8)
+                else:
+                    if self.async_save:
+                        data = np.array(data, copy=True)  # stable snapshot
+                    payload = as_bytes_view(data)
+                items.append(SaveItem(f"{key}#{n}", payload,
+                                      str(data.dtype), tuple(t.shape), index,
+                                      record_key=key))
+        items.append(SaveItem(LEAN_KEY, lean_blob, is_blob=True))
+        metrics.d2h_seconds = time.perf_counter() - t0
+        metrics.total_bytes = sum(it.nbytes for it in items)
+
+        # Cross-rank prefix sum for the single-file layout (paper §3.6).
+        rank_totals = None
+        if Strategy.parse(self.config.strategy) is Strategy.SINGLE_FILE:
+            local_total = rank_padded_total(
+                [ObjectSpec(i.key, i.nbytes) for i in items], self.config.align)
+            rank_totals = self._allgather_totals(local_total, rank, num_ranks)
+
+        tmp = os.path.join(self.directory,
+                           f"{step_dir_name(step)}.tmp-{uuid.uuid4().hex[:8]}")
+        os.makedirs(tmp, exist_ok=True)
+
+        def flush():
+            t1 = time.perf_counter()
+            manifest = self.engine.save(tmp, items, step=step, rank=rank,
+                                        num_ranks=num_ranks,
+                                        rank_totals=rank_totals)
+            metrics.flush_seconds = time.perf_counter() - t1
+            t2 = time.perf_counter()
+            manifest.extra["save_metrics"] = {
+                "total_bytes": metrics.total_bytes,
+                "flush_seconds": metrics.flush_seconds,
+            }
+            if quantized_keys:
+                manifest.extra["quantized"] = quantized_keys
+            manifest.save(tmp)
+            final = os.path.join(self.directory, step_dir_name(step))
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._fsync_dir(self.directory)
+            metrics.commit_seconds = time.perf_counter() - t2
+            metrics.end_to_end_seconds = time.perf_counter() - t_start
+            self._gc_old()
+
+        if self.async_save:
+            metrics.blocking_seconds = time.perf_counter() - t_start
+            self._flush_error = None
+            th = threading.Thread(target=self._guard(flush), daemon=True,
+                                  name=f"ckpt-flush-{step}")
+            self._flush_thread = th
+            th.start()
+        else:
+            flush()
+            metrics.blocking_seconds = metrics.end_to_end_seconds
+        self.last_save_metrics = metrics
+        return metrics
+
+    def _guard(self, fn):
+        def wrapped():
+            try:
+                fn()
+            except BaseException as e:  # surfaced on next wait()/save()
+                self._flush_error = e
+        return wrapped
+
+    def wait(self) -> None:
+        """Block until any in-flight async flush committed."""
+        th = self._flush_thread
+        if th is not None:
+            th.join()
+            self._flush_thread = None
+        if self._flush_error is not None:
+            err, self._flush_error = self._flush_error, None
+            raise RuntimeError("async checkpoint flush failed") from err
+
+    # -------------------------------------------------------------- restore
+    def restore(self, state_template=None, *, step: int | None = None,
+                shardings=None):
+        """Restore a checkpoint.
+
+        ``state_template``: a pytree of like-shaped arrays (or
+        ShapeDtypeStructs) whose shardings define the target placement. When
+        None, tensors come back as host numpy arrays in the saved tree
+        structure (using the lean object).
+        """
+        t_start = time.perf_counter()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        ckpt = os.path.join(self.directory, step_dir_name(step))
+        manifest = Manifest.load(ckpt)
+        metrics = RestoreMetrics(step=step)
+
+        # lean object first (its stubs define the saved tree)
+        lean_rec = manifest.blobs[LEAN_KEY]
+        lean_raw = self.engine.read(
+            ckpt, [ReadReq(LEAN_KEY, lean_rec.path, lean_rec.offset,
+                           lean_rec.nbytes)])[LEAN_KEY]
+        self._check_crc(lean_rec.crc32, lean_raw, LEAN_KEY)
+        lean_tree = deserialize_lean(lean_raw.tobytes())
+
+        # decide the wanted windows per tensor
+        wanted: dict[str, list[tuple]] = {}   # key -> [(window, device|None)]
+        template_by_key: dict[str, object] = {}
+        if state_template is not None:
+            template_by_key = _template_tensors(state_template)
+        for stub in iter_stubs(lean_tree):
+            rec = manifest.tensors[stub.key]
+            tmpl = template_by_key.get(stub.key)
+            shard_list = self._target_windows(rec, tmpl, shardings)
+            wanted[stub.key] = shard_list
+
+        # plan all reads, deduped by (object, extent), then ONE engine.read call
+        t0 = time.perf_counter()
+        extent_reqs: dict[tuple[str, str, int], ReadReq] = {}
+        for key, windows in wanted.items():
+            rec = _deduped(manifest.tensors[key])
+            for window, _dev in windows:
+                for piece in plan_window(rec, window):
+                    sh = piece.shard
+                    extent_reqs.setdefault(
+                        (key, sh.path, sh.offset),
+                        ReadReq(f"{key}@{sh.path}@{sh.offset}", sh.path,
+                                sh.offset, sh.nbytes, obj=key))
+        raw = self.engine.read(ckpt, list(extent_reqs.values()))
+        metrics.read_seconds = time.perf_counter() - t0
+        extent_bytes = {eo: raw[req.key] for eo, req in extent_reqs.items()}
+        if self.verify_crc:
+            self._verify_extents(manifest, extent_bytes)
+
+        # assemble + device placement
+        t0 = time.perf_counter()
+        qset = set(manifest.extra.get("quantized", ()))
+        out_tensors: dict[str, object] = {}
+        for stub in iter_stubs(lean_tree):
+            rec = _deduped(manifest.tensors[stub.key])
+            windows = wanted[stub.key]
+            tmpl = template_by_key.get(stub.key)
+            out_tensors[stub.key] = self._materialize(
+                rec, windows, tmpl, extent_bytes, metrics,
+                quantized=stub.key in qset)
+        metrics.assemble_seconds = time.perf_counter() - t0 - metrics.h2d_seconds
+
+        metrics.total_bytes = sum(
+            s.nbytes for r in manifest.tensors.values() for s in r.shards)
+        metrics.end_to_end_seconds = time.perf_counter() - t_start
+        self.last_restore_metrics = metrics
+        state = reinsert_tensors(lean_tree, out_tensors)
+        return state
+
+    # ------------------------------------------------------------- internals
+    @staticmethod
+    def _host_shards(t):
+        """Yield (host_array, global_index) for shards this process owns."""
+        if isinstance(t, jax.Array) and hasattr(t, "addressable_shards"):
+            for sh in t.addressable_shards:
+                if sh.replica_id != 0:
+                    continue  # DP replica dedup
+                idx = normalize_index(sh.index, t.shape)
+                yield to_numpy_view(sh.data), idx
+        else:
+            arr = to_numpy_view(t)
+            yield arr, tuple((0, s) for s in arr.shape)
+
+    @staticmethod
+    def _allgather_totals(local_total: int, rank: int, num_ranks: int) -> list[int]:
+        if num_ranks == 1:
+            return [local_total]
+        from jax.experimental import multihost_utils
+        gathered = multihost_utils.process_allgather(
+            np.asarray([local_total], dtype=np.int64))
+        return [int(x) for x in np.asarray(gathered).reshape(-1)]
+
+    def _target_windows(self, rec, tmpl, shardings):
+        """(window, sharding_or_None) pairs this process must materialize."""
+        sharding = None
+        if shardings is not None and rec.key in shardings:
+            sharding = shardings[rec.key]
+        elif tmpl is not None:
+            sharding = getattr(tmpl, "sharding", None)
+        if sharding is None:
+            return [(tuple((0, s) for s in rec.global_shape), None)]
+        # one window per addressable device
+        windows = []
+        idx_map = sharding.addressable_devices_indices_map(tuple(rec.global_shape))
+        for dev, idx in idx_map.items():
+            windows.append((normalize_index(idx, rec.global_shape),
+                            (sharding, dev)))
+        return windows
+
+    def _materialize(self, rec, windows, tmpl, extent_bytes, metrics,
+                     quantized: bool = False):
+        if quantized:
+            from . import quant_codec
+            dt = parse_dtype(rec.dtype)
+            cache: dict = {}
+
+            def lookup(sh):
+                k = (rec.key, sh.path, sh.offset)
+                if k not in cache:
+                    cache[k] = quant_codec.unpack(extent_bytes[k], dt)
+                return cache[k]
+        else:
+            lookup = lambda sh: extent_bytes[(rec.key, sh.path, sh.offset)]
+        if windows and windows[0][1] is None:
+            return assemble(rec, windows[0][0], lookup)
+        # build one array per device, then a global jax.Array
+        sharding = windows[0][1][0]
+        per_device = {}
+        arrays = []
+        t0 = time.perf_counter()
+        for window, (shd, dev) in windows:
+            wkey = tuple(window)
+            if wkey not in per_device:
+                per_device[wkey] = assemble(rec, window, lookup)
+            arrays.append(jax.device_put(per_device[wkey], dev))
+        global_shape = tuple(rec.global_shape)
+        out = jax.make_array_from_single_device_arrays(
+            global_shape, sharding, arrays)
+        metrics.h2d_seconds += time.perf_counter() - t0
+        return out
+
+    def _check_crc(self, expect, raw, key) -> None:
+        if self.verify_crc and expect is not None:
+            got = crc32_of(raw)
+            if got != expect:
+                raise IOError(f"CRC mismatch for {key}: {got:#x} != {expect:#x}")
+
+    def _verify_extents(self, manifest, extent_bytes) -> None:
+        by_extent = {}
+        for rec in manifest.tensors.values():
+            for sh in rec.shards:
+                by_extent[(rec.key, sh.path, sh.offset)] = (sh.crc32, rec.key)
+        for eo, raw in extent_bytes.items():
+            expect, key = by_extent.get(eo, (None, None))
+            self._check_crc(expect, raw, key)
+
+    @staticmethod
+    def _fsync_dir(path: str) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def close(self) -> None:
+        self.wait()
+        self.engine.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def _deduped(rec):
+    import copy
+    out = copy.copy(rec)
+    out.shards = dedupe_shards(rec)
+    return out
+
+
+def _template_tensors(state_template) -> dict[str, object]:
+    """key -> template leaf (anything with .shape/.dtype, incl. SDS)."""
+    from .serialization import path_str
+    flat, _ = jax.tree_util.tree_flatten_with_path(state_template)
+    out = {}
+    for path, leaf in flat:
+        if (isinstance(leaf, jax.Array)
+                and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)):
+            out[path_str(path)] = jax.random.key_data(leaf)
+        elif hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            out[path_str(path)] = leaf
+    return out

@@ -1,0 +1,199 @@
+"""AggregatedEngine — the paper's "ideal approach", productionized.
+
+Write path (paper Observations 1, 2, 4):
+  · layout per the configured aggregation strategy (default: single aggregated
+    file with cross-rank prefix-sum offsets),
+  · request-level coalescing: small objects are staged into pooled aligned
+    buffers and flushed as FEW LARGE writes (one per ~coalesce_bytes group),
+  · large objects are staged through a small ring of chunk buffers so the
+    memcpy of chunk k+1 overlaps the write of chunk k (double buffering),
+  · O_DIRECT by default (4.8× write uplift in the paper), deep submission
+    queues, batched io_uring submission, optional registered buffers.
+
+Restore path (paper Observation 3):
+  · coalesced reads — one I/O per group region covering many small objects,
+  · preallocated POOLED buffers (the fix for DataStates' dominant
+    allocation cost), O_DIRECT reads for large transfers.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..aggregation import Extent, coalesce
+from ..buffers import align_up
+from ..io_engine import IORequest, OP_READ, OP_WRITE
+from ..manifest import Manifest, crc32_of
+from .base import CREngine, IOStats, ReadReq, SaveItem, item_mv
+
+
+class AggregatedEngine(CREngine):
+    name = "aggregated"
+
+    # ------------------------------------------------------------------ save
+    def save(self, ckpt_dir: str, items: list[SaveItem], *, step: int = 0,
+             rank: int = 0, num_ranks: int = 1,
+             rank_totals: list[int] | None = None) -> Manifest:
+        cfg = self.config
+        t0 = time.perf_counter()
+        stats = IOStats()
+        plan = self._plan(items, rank, rank_totals)
+        by_key = {it.key: it for it in items}
+        groups = coalesce(plan.extents, cfg.coalesce_bytes, cfg.align)
+        fds = self._open_files(ckpt_dir, plan, "w", preallocate=True)
+        stats.files = len(fds)
+        crcs: dict[str, int] = {}
+
+        io = self._make_io()
+        inflight_bufs: dict[int, object] = {}  # user_data -> buffer to release
+        token = 0
+
+        def reap(block_min: int):
+            for c in io.poll(min_n=block_min):
+                buf = inflight_bufs.pop(c.user_data, None)
+                if buf is not None:
+                    buf.release()
+
+        def stage_and_write(fd: int, file_off: int, fill, span: int):
+            """Acquire buffer, run fill(buf), submit one write of span bytes."""
+            nonlocal token
+            ta = time.perf_counter()
+            buf = self.pool.get(span)
+            tb = time.perf_counter()
+            fill(buf)
+            tc = time.perf_counter()
+            stats.alloc_seconds += tb - ta
+            stats.copy_seconds += tc - tb
+            token += 1
+            inflight_bufs[token] = buf
+            io.submit([IORequest(OP_WRITE, fd, file_off, buf, 0, span,
+                                 user_data=token)])
+            stats.io_requests += 1
+            while io.inflight >= cfg.queue_depth:
+                reap(1)
+
+        try:
+            for group in groups:
+                first, last = group[0], group[-1]
+                if len(group) == 1 and first.nbytes > cfg.chunk_bytes:
+                    # Large object: chunked staging, pipelined with writes.
+                    mv = item_mv(by_key[first.key])
+                    if cfg.checksum:
+                        crcs[first.key] = crc32_of(mv)
+                    pos = 0
+                    while pos < first.nbytes:
+                        n = min(cfg.chunk_bytes, first.nbytes - pos)
+                        chunk = mv[pos:pos + n]
+                        stage_and_write(
+                            fds[first.path], first.offset + pos,
+                            lambda b, c=chunk, n=n: b.view(0, n).__setitem__(
+                                slice(None), c),
+                            align_up(n, cfg.align))
+                        pos += n
+                else:
+                    # Coalesced group: one staged buffer, ONE write.
+                    span = (last.offset + align_up(last.nbytes, cfg.align)
+                            - first.offset)
+
+                    def fill(buf, group=group, first=first):
+                        for e in group:
+                            mv = item_mv(by_key[e.key])
+                            buf.view(e.offset - first.offset, e.nbytes)[:] = mv
+                            if cfg.checksum:
+                                crcs[e.key] = crc32_of(mv)
+
+                    stage_and_write(fds[first.path], first.offset, fill, span)
+            while io.inflight:
+                reap(1)
+            reap(0)   # drain engines that complete inline (posix)
+            t_io0 = time.perf_counter()
+            self._fsync_all(io, fds)
+            stats.io_seconds += time.perf_counter() - t_io0
+        finally:
+            io.close()
+            self._close_files(fds)
+
+        stats.logical_bytes = plan.total_logical_bytes
+        stats.seconds = time.perf_counter() - t0
+        self.last_save_stats = stats
+        return self._manifest_from(items, plan, step=step,
+                                   num_ranks=num_ranks, crcs=crcs or None)
+
+    # ------------------------------------------------------------------ read
+    def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
+        cfg = self.config
+        t0 = time.perf_counter()
+        stats = IOStats()
+        out: dict[str, np.ndarray] = {}
+        extents = [Extent(r.key, r.path, r.offset, r.nbytes) for r in reqs]
+        groups = coalesce(extents, cfg.coalesce_bytes, cfg.align)
+        fds = self._open_files(ckpt_dir, {r.path for r in reqs}, "r")
+        stats.files = len(fds)
+        io = self._make_io()
+        handlers: dict[int, tuple] = {}  # token -> (buf, on_done)
+        token = 0
+
+        def reap(block_min: int):
+            for c in io.poll(min_n=block_min):
+                buf, on_done = handlers.pop(c.user_data)
+                tb = time.perf_counter()
+                on_done(buf)
+                stats.copy_seconds += time.perf_counter() - tb
+                buf.release()
+
+        def submit_read(fd: int, file_off: int, span: int, on_done):
+            nonlocal token
+            ta = time.perf_counter()
+            buf = self.pool.get(span)
+            stats.alloc_seconds += time.perf_counter() - ta
+            token += 1
+            handlers[token] = (buf, on_done)
+            io.submit([IORequest(OP_READ, fd, file_off, buf, 0, span,
+                                 user_data=token)])
+            stats.io_requests += 1
+            while io.inflight >= cfg.queue_depth:
+                reap(1)
+
+        try:
+            for group in groups:
+                first, last = group[0], group[-1]
+                if len(group) == 1 and first.nbytes > cfg.chunk_bytes:
+                    # Large object: chunked pipelined reads into one dest array.
+                    dest = np.empty(first.nbytes, dtype=np.uint8)
+                    out[first.key] = dest
+                    pos = 0
+                    while pos < first.nbytes:
+                        n = min(cfg.chunk_bytes, first.nbytes - pos)
+
+                        def done(buf, dest=dest, pos=pos, n=n):
+                            dest[pos:pos + n] = np.frombuffer(
+                                buf.view(0, n), np.uint8)
+
+                        submit_read(fds[first.path], first.offset + pos,
+                                    align_up(n, cfg.align), done)
+                        pos += n
+                else:
+                    span = (last.offset + align_up(last.nbytes, cfg.align)
+                            - first.offset)
+
+                    def done(buf, group=group, first=first):
+                        for e in group:
+                            arr = np.empty(e.nbytes, dtype=np.uint8)
+                            arr[:] = np.frombuffer(
+                                buf.view(e.offset - first.offset, e.nbytes),
+                                np.uint8)
+                            out[e.key] = arr
+
+                    submit_read(fds[first.path], first.offset, span, done)
+            while io.inflight:
+                reap(1)
+            reap(0)   # drain engines that complete inline (posix)
+        finally:
+            io.close()
+            self._close_files(fds)
+        stats.logical_bytes = sum(r.nbytes for r in reqs)
+        stats.seconds = time.perf_counter() - t0
+        self.last_restore_stats = stats
+        return out

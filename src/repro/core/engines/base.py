@@ -1,0 +1,207 @@
+"""Common machinery for checkpoint/restore engines.
+
+An engine turns a list of host-resident byte objects (``SaveItem``) into files
+under a checkpoint directory and back. Engines differ along exactly the axes
+the paper studies: layout (aggregation strategy), I/O backend (uring / threads
+/ POSIX), caching mode (O_DIRECT or buffered), submission granularity
+(batched-coalesced vs per-object), and buffer management (pooled vs dynamic).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..aggregation import Extent, ObjectSpec, Strategy, WritePlan, plan_layout, rank_padded_total
+from ..buffers import AlignedBuffer, BufferPool, PAGE, align_up
+from ..io_engine import IOEngine, IORequest, OP_READ, OP_WRITE, make_engine, open_for
+from ..manifest import BlobRecord, Manifest, ShardEntry, crc32_of
+
+
+@dataclass
+class SaveItem:
+    """One host-resident object to persist.
+
+    ``key`` must be unique across the rank's items (it names the extent);
+    ``record_key`` groups multiple shards of one global tensor in the manifest
+    (defaults to ``key``).
+    """
+    key: str
+    data: object                      # buffer-protocol object (np.ndarray, bytes, memoryview)
+    dtype: str | None = None          # tensor metadata (None for blobs)
+    global_shape: tuple[int, ...] | None = None
+    index: tuple[tuple[int, int], ...] | None = None  # global (start, stop) per dim
+    is_blob: bool = False
+    record_key: str | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return memoryview(self.data).nbytes
+
+    def mv(self) -> memoryview:
+        return item_mv(self)
+
+
+@dataclass
+class ReadReq:
+    """One byte-range to read back.
+
+    ``key`` names the result in the returned dict (unique per request);
+    ``obj`` is the logical object key in the manifest (used by engines whose
+    formats are object-addressed rather than extent-addressed, e.g. torchsave).
+    """
+    key: str
+    path: str
+    offset: int
+    nbytes: int
+    obj: str | None = None
+
+
+@dataclass
+class IOStats:
+    seconds: float = 0.0
+    logical_bytes: int = 0
+    io_requests: int = 0
+    files: int = 0
+    alloc_seconds: float = 0.0   # buffer acquisition time (paper Fig 13)
+    copy_seconds: float = 0.0    # staging memcpy time
+    io_seconds: float = 0.0      # submit+wait time
+
+    @property
+    def gbps(self) -> float:
+        return self.logical_bytes / self.seconds / 1e9 if self.seconds else 0.0
+
+
+@dataclass
+class EngineConfig:
+    backend: str = "uring"            # uring | threadpool | posix
+    strategy: Strategy | str = Strategy.SINGLE_FILE
+    direct: bool = True               # O_DIRECT
+    queue_depth: int = 64
+    ring_entries: int = 256
+    chunk_bytes: int = 64 << 20       # submission chunk for large objects
+    coalesce_bytes: int = 64 << 20    # staging-batch target (paper: ~2GB/rank saturates)
+    checksum: bool = False
+    pooled_buffers: bool = True       # False models DataStates' dynamic allocation
+    register_buffers: bool = False    # io_uring fixed buffers
+    sqpoll: bool = False
+    fsync_on_save: bool = True
+    truncate: bool = True             # False: multi-rank shared-file mode
+    align: int = PAGE
+
+    def normalized(self) -> "EngineConfig":
+        self.strategy = Strategy.parse(self.strategy)
+        return self
+
+
+class CREngine:
+    """Base class. Subclasses set ``name`` and override save/restore."""
+
+    name = "base"
+
+    def __init__(self, config: EngineConfig | None = None,
+                 pool: BufferPool | None = None):
+        self.config = (config or EngineConfig()).normalized()
+        self.pool = pool or BufferPool(disabled=not self.config.pooled_buffers)
+        self.last_save_stats = IOStats()
+        self.last_restore_stats = IOStats()
+
+    # ------------------------------------------------------------------ API
+    def save(self, ckpt_dir: str, items: list[SaveItem], *, step: int = 0,
+             rank: int = 0, num_ranks: int = 1,
+             rank_totals: list[int] | None = None) -> Manifest:
+        raise NotImplementedError
+
+    def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        self.pool.drain()
+
+    # --------------------------------------------------------------- helpers
+    def _make_io(self, fixed: list[AlignedBuffer] | None = None) -> IOEngine:
+        kw = {}
+        if self.config.backend == "uring":
+            kw = {"entries": self.config.ring_entries, "sqpoll": self.config.sqpoll}
+            if fixed and self.config.register_buffers:
+                kw["fixed_buffers"] = fixed
+        elif self.config.backend == "threadpool":
+            kw = {"workers": min(self.config.queue_depth, 16)}
+        return make_engine(self.config.backend, **kw)
+
+    def _plan(self, items: list[SaveItem], rank: int,
+              rank_totals: list[int] | None) -> WritePlan:
+        objects = [ObjectSpec(i.key, i.nbytes) for i in items]
+        if (Strategy.parse(self.config.strategy) is Strategy.SINGLE_FILE
+                and rank_totals is None):
+            rank_totals = [rank_padded_total(objects, self.config.align)]
+        return plan_layout(objects, self.config.strategy, rank=rank,
+                           rank_totals=rank_totals, align=self.config.align)
+
+    def _manifest_from(self, items: list[SaveItem], plan: WritePlan, *,
+                       step: int, num_ranks: int,
+                       crcs: dict[str, int] | None = None) -> Manifest:
+        m = Manifest(step=step, num_ranks=num_ranks,
+                     strategy=Strategy.parse(self.config.strategy).value)
+        by_key = {e.key: e for e in plan.extents}
+        for it in items:
+            e = by_key[it.key]
+            crc = (crcs or {}).get(it.key)
+            rkey = it.record_key or it.key
+            if it.is_blob:
+                m.blobs[rkey] = BlobRecord(rkey, e.path, e.offset,
+                                           e.nbytes, crc)
+            else:
+                index = it.index
+                if index is None:
+                    index = tuple((0, s) for s in (it.global_shape if it.global_shape is not None else ()))
+                m.add_shard(rkey, it.dtype or "uint8",
+                            it.global_shape if it.global_shape is not None else (it.nbytes,),
+                            ShardEntry(index, e.path, e.offset, e.nbytes, crc))
+        m.extra["engine"] = {
+            "name": self.name, "backend": self.config.backend,
+            "direct": self.config.direct, "queue_depth": self.config.queue_depth,
+            "chunk_bytes": self.config.chunk_bytes,
+            "coalesce_bytes": self.config.coalesce_bytes,
+        }
+        return m
+
+    def _open_files(self, ckpt_dir: str, plan_or_paths, mode: str,
+                    preallocate: bool = False) -> dict[str, int]:
+        fds: dict[str, int] = {}
+        if isinstance(plan_or_paths, WritePlan):
+            sizes = plan_or_paths.file_sizes
+        else:
+            sizes = {p: 0 for p in plan_or_paths}
+        for path, size in sizes.items():
+            full = os.path.join(ckpt_dir, path)
+            mode_eff = "rw" if (mode == "w" and not self.config.truncate) \
+                else mode
+            fd = open_for(full, mode_eff, direct=self.config.direct)
+            if preallocate and mode != "r" and size:
+                try:
+                    os.posix_fallocate(fd, 0, size)
+                except OSError:
+                    pass
+            fds[path] = fd
+        return fds
+
+    @staticmethod
+    def _close_files(fds: dict[str, int]) -> None:
+        for fd in fds.values():
+            os.close(fd)
+
+    def _fsync_all(self, io: IOEngine, fds: dict[str, int]) -> None:
+        if self.config.fsync_on_save:
+            for fd in fds.values():
+                io.fsync(fd)
+
+
+def item_mv(it: "SaveItem") -> memoryview:
+    m = memoryview(it.data)
+    if m.format != "B" or m.ndim != 1:
+        m = m.cast("B")
+    return m

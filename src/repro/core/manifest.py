@@ -1,0 +1,156 @@
+"""Checkpoint manifest: the metadata header mapping tensors to file extents.
+
+Paper §2 stage (4): "Metadata headers map tensors to offsets in files for
+reconstruction during the restore." Ours additionally records the *global*
+shape and per-shard index windows so restore can reshard elastically (restore
+onto a different mesh than the one that saved — DESIGN.md §2 extension 4).
+
+The manifest is a single JSON document per checkpoint version, written last and
+fsync'd, then the version directory is atomically committed via rename. A
+checkpoint without a committed manifest is invalid by definition (crash
+consistency).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from dataclasses import dataclass, field, asdict
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_VERSION = 2
+
+
+@dataclass(frozen=True)
+class ShardEntry:
+    """One saved shard of one global tensor."""
+    index: tuple[tuple[int, int], ...]  # (start, stop) per dim, global coords
+    path: str                           # file path relative to ckpt dir
+    offset: int                         # byte offset in file
+    nbytes: int                         # logical bytes
+    crc32: int | None = None
+
+    def to_json(self):
+        return {"index": [list(p) for p in self.index], "path": self.path,
+                "offset": self.offset, "nbytes": self.nbytes, "crc32": self.crc32}
+
+    @staticmethod
+    def from_json(d) -> "ShardEntry":
+        return ShardEntry(tuple(tuple(p) for p in d["index"]), d["path"],
+                          d["offset"], d["nbytes"], d.get("crc32"))
+
+
+@dataclass
+class TensorRecord:
+    key: str
+    dtype: str           # numpy dtype string, e.g. 'bfloat16', 'float32'
+    global_shape: tuple[int, ...]
+    shards: list[ShardEntry] = field(default_factory=list)
+
+    def to_json(self):
+        return {"key": self.key, "dtype": self.dtype,
+                "global_shape": list(self.global_shape),
+                "shards": [s.to_json() for s in self.shards]}
+
+    @staticmethod
+    def from_json(d) -> "TensorRecord":
+        return TensorRecord(d["key"], d["dtype"], tuple(d["global_shape"]),
+                            [ShardEntry.from_json(s) for s in d["shards"]])
+
+
+@dataclass
+class BlobRecord:
+    """A serialized non-tensor byte object (e.g. the 'lean' pytree)."""
+    key: str
+    path: str
+    offset: int
+    nbytes: int
+    crc32: int | None = None
+
+    def to_json(self):
+        return asdict(self)
+
+    @staticmethod
+    def from_json(d) -> "BlobRecord":
+        return BlobRecord(d["key"], d["path"], d["offset"], d["nbytes"],
+                          d.get("crc32"))
+
+
+@dataclass
+class Manifest:
+    step: int
+    num_ranks: int
+    strategy: str
+    format_version: int = FORMAT_VERSION
+    tensors: dict[str, TensorRecord] = field(default_factory=dict)
+    blobs: dict[str, BlobRecord] = field(default_factory=dict)
+    extra: dict = field(default_factory=dict)  # engine config, mesh, timings
+
+    # ---- construction helpers -------------------------------------------
+    def add_shard(self, key: str, dtype: str, global_shape: tuple[int, ...],
+                  entry: ShardEntry) -> None:
+        rec = self.tensors.get(key)
+        if rec is None:
+            rec = self.tensors[key] = TensorRecord(key, dtype, tuple(global_shape))
+        else:
+            if rec.dtype != dtype or rec.global_shape != tuple(global_shape):
+                raise ValueError(f"inconsistent tensor record for {key}")
+        rec.shards.append(entry)
+
+    def merge(self, other: "Manifest") -> None:
+        """Merge per-rank manifests into the global one (rank-0 commit)."""
+        for key, rec in other.tensors.items():
+            for s in rec.shards:
+                self.add_shard(key, rec.dtype, rec.global_shape, s)
+        self.blobs.update(other.blobs)
+
+    @property
+    def total_bytes(self) -> int:
+        return (sum(s.nbytes for r in self.tensors.values() for s in r.shards)
+                + sum(b.nbytes for b in self.blobs.values()))
+
+    # ---- (de)serialization ------------------------------------------------
+    def to_json(self) -> dict:
+        return {"format_version": self.format_version, "step": self.step,
+                "num_ranks": self.num_ranks, "strategy": self.strategy,
+                "tensors": {k: v.to_json() for k, v in self.tensors.items()},
+                "blobs": {k: v.to_json() for k, v in self.blobs.items()},
+                "extra": self.extra}
+
+    def dumps(self) -> bytes:
+        return json.dumps(self.to_json(), separators=(",", ":")).encode()
+
+    @staticmethod
+    def loads(data: bytes) -> "Manifest":
+        d = json.loads(data)
+        if d["format_version"] > FORMAT_VERSION:
+            raise ValueError(f"manifest from the future: {d['format_version']}")
+        m = Manifest(d["step"], d["num_ranks"], d["strategy"],
+                     d["format_version"])
+        m.tensors = {k: TensorRecord.from_json(v) for k, v in d["tensors"].items()}
+        m.blobs = {k: BlobRecord.from_json(v) for k, v in d["blobs"].items()}
+        m.extra = d.get("extra", {})
+        return m
+
+    def save(self, ckpt_dir: str) -> None:
+        payload = self.dumps()
+        tmp = os.path.join(ckpt_dir, MANIFEST_NAME + ".tmp")
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(ckpt_dir, MANIFEST_NAME))
+
+    @staticmethod
+    def load(ckpt_dir: str) -> "Manifest":
+        with open(os.path.join(ckpt_dir, MANIFEST_NAME), "rb") as f:
+            return Manifest.loads(f.read())
+
+    @staticmethod
+    def exists(ckpt_dir: str) -> bool:
+        return os.path.exists(os.path.join(ckpt_dir, MANIFEST_NAME))
+
+
+def crc32_of(mv) -> int:
+    return zlib.crc32(mv) & 0xFFFFFFFF

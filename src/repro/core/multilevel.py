@@ -1,0 +1,194 @@
+"""Multi-level checkpointing: local-first capture, async PFS flush, hedged
+straggler mitigation.
+
+Traditional HPC C/R frameworks (VELOC/FTI/SCR, paper §2) pre-coalesce to local
+storage before flushing to the PFS. We adopt the same split for the LLM case:
+
+  level 0 — node-local directory (fast, survives process crash, not node loss)
+  level 1 — shared/parallel FS directory (slow, survives node loss)
+
+``save`` returns as soon as level 0 committed; the level-1 flush runs in the
+background. Slow per-file copies (stragglers — e.g. a contended OST) are
+*hedged*: after a deadline, a duplicate transfer is issued and the first to
+finish wins — bounding the tail without failing the flush.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, wait, FIRST_COMPLETED
+from dataclasses import dataclass, field
+
+from .checkpoint import CheckpointManager, step_dir_name
+from .manifest import Manifest
+
+
+@dataclass
+class FlushStats:
+    files: int = 0
+    bytes: int = 0
+    seconds: float = 0.0
+    hedged: int = 0          # duplicate transfers issued
+    hedge_wins: int = 0      # duplicates that beat the original
+
+
+def _default_copy(src: str, dst: str) -> None:
+    tmp = dst + ".tmp"
+    with open(src, "rb") as fi, open(tmp, "wb") as fo:
+        shutil.copyfileobj(fi, fo, length=8 << 20)
+        fo.flush()
+        os.fsync(fo.fileno())
+    os.replace(tmp, dst)
+
+
+class MultiLevelCheckpointer:
+    """CheckpointManager wrapper adding a second (remote) persistence level."""
+
+    def __init__(self, local_dir: str, remote_dir: str, *,
+                 engine: str = "aggregated", config=None,
+                 hedge_after_s: float = 5.0, min_bw_bytes_s: float = 50e6,
+                 flush_workers: int = 4, copy_fn=_default_copy, **mgr_kw):
+        self.local = CheckpointManager(local_dir, engine=engine,
+                                       config=config, **mgr_kw)
+        self.remote_dir = os.path.abspath(remote_dir)
+        os.makedirs(self.remote_dir, exist_ok=True)
+        self.hedge_after_s = hedge_after_s
+        self.min_bw_bytes_s = min_bw_bytes_s
+        self.copy_fn = copy_fn
+        self._pool = ThreadPoolExecutor(max_workers=flush_workers,
+                                        thread_name_prefix="flush")
+        self._flush_thread: threading.Thread | None = None
+        self._flush_error: BaseException | None = None
+        self.last_flush_stats = FlushStats()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, **kw):
+        self.wait()
+        metrics = self.local.save(step, state, **kw)   # level 0
+        self.local.wait()
+        th = threading.Thread(target=self._flush_guarded, args=(step,),
+                              daemon=True, name=f"l1-flush-{step}")
+        self._flush_thread = th
+        th.start()
+        return metrics
+
+    def _flush_guarded(self, step: int) -> None:
+        try:
+            self.flush_to_remote(step)
+        except BaseException as e:
+            self._flush_error = e
+
+    def flush_to_remote(self, step: int) -> FlushStats:
+        """Copy a committed local step dir to the remote level, hedged."""
+        stats = FlushStats()
+        t0 = time.perf_counter()
+        src_dir = os.path.join(self.local.directory, step_dir_name(step))
+        dst_tmp = os.path.join(self.remote_dir,
+                               f"{step_dir_name(step)}.tmp-flush")
+        dst_fin = os.path.join(self.remote_dir, step_dir_name(step))
+        shutil.rmtree(dst_tmp, ignore_errors=True)
+
+        files = []
+        for root, _dirs, names in os.walk(src_dir):
+            for n in names:
+                full = os.path.join(root, n)
+                rel = os.path.relpath(full, src_dir)
+                files.append((full, rel, os.path.getsize(full)))
+        # manifest last: its presence defines validity at level 1 too
+        files.sort(key=lambda f: (f[1] == "manifest.json", f[1]))
+
+        for src, rel, size in files:
+            dst = os.path.join(dst_tmp, rel)
+            os.makedirs(os.path.dirname(dst), exist_ok=True)
+            self._copy_hedged(src, dst, size, stats)
+            stats.files += 1
+            stats.bytes += size
+        os.replace(dst_tmp, dst_fin)
+        stats.seconds = time.perf_counter() - t0
+        self.last_flush_stats = stats
+        return stats
+
+    def _copy_hedged(self, src: str, dst: str, size: int,
+                     stats: FlushStats) -> None:
+        deadline = max(self.hedge_after_s, size / self.min_bw_bytes_s)
+        attempts = {self._pool.submit(self.copy_fn, src, dst): "primary"}
+        hedged = False
+        while True:
+            done, pending = wait(list(attempts), timeout=deadline,
+                                 return_when=FIRST_COMPLETED)
+            if done:
+                winner = next(iter(done))
+                err = winner.exception()
+                if err is None:
+                    if attempts[winner] == "hedge":
+                        stats.hedge_wins += 1
+                        os.replace(dst + ".hedge", dst)
+                    return
+                del attempts[winner]
+                if not attempts:  # all attempts failed
+                    raise err
+            elif not hedged:
+                hedged = True
+                stats.hedged += 1
+                attempts[self._pool.submit(self.copy_fn, src,
+                                           dst + ".hedge")] = "hedge"
+                # a winning hedge is moved into place
+                deadline = None
+            if hedged and os.path.exists(dst + ".hedge"):
+                os.replace(dst + ".hedge", dst)
+                return
+
+    # --------------------------------------------------------------- restore
+    def restore(self, state_template=None, *, step: int | None = None, **kw):
+        """Prefer level 0; fall back to level 1 (node-loss recovery)."""
+        self.wait()
+        local_steps = self.local.all_steps()
+        if step is None:
+            remote_steps = self._remote_steps()
+            all_steps = sorted(set(local_steps) | set(remote_steps))
+            if not all_steps:
+                raise FileNotFoundError("no checkpoints at any level")
+            step = all_steps[-1]
+        if step in local_steps:
+            return self.local.restore(state_template, step=step, **kw)
+        # pull from remote into local, then restore
+        src = os.path.join(self.remote_dir, step_dir_name(step))
+        dst = os.path.join(self.local.directory, step_dir_name(step))
+        if not Manifest.exists(src):
+            raise FileNotFoundError(f"step {step} not committed at level 1")
+        tmp = dst + ".tmp-pull"
+        shutil.rmtree(tmp, ignore_errors=True)
+        shutil.copytree(src, tmp)
+        os.replace(tmp, dst)
+        return self.local.restore(state_template, step=step, **kw)
+
+    def _remote_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.remote_dir):
+            if name.startswith("step_") and ".tmp" not in name and \
+                    Manifest.exists(os.path.join(self.remote_dir, name)):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def wait(self) -> None:
+        th = self._flush_thread
+        if th is not None:
+            th.join()
+            self._flush_thread = None
+        if self._flush_error is not None:
+            err, self._flush_error = self._flush_error, None
+            raise RuntimeError("level-1 flush failed") from err
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown(wait=True)
+        self.local.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

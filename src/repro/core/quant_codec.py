@@ -1,0 +1,80 @@
+"""int8 checkpoint codec — beyond-paper flush-volume optimization.
+
+The paper's roofline is storage bandwidth; quantizing optimizer moments
+(fp32 → int8 + per-512-group scales) cuts their flush bytes ~3.9× and
+end-to-end checkpoint volume ~2.3× (moments are 8 of every 10 state bytes
+under AdamW with bf16 params). Uses the Pallas kernel on TPU and its jitted
+jnp oracle on CPU (interpret-mode Pallas would be Python-slow at GB scale).
+
+Wire format per packed shard (little-endian):
+    magic  u32 = 0x51384B50  ("PQ8P")
+    orig_nbytes u64, rows u32, cols u32
+    q payload  int8[rows*cols]
+    scales     f32[rows]
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAGIC = 0x51384B50
+HEADER = struct.Struct("<IQII")
+GROUP_COLS = 512   # must match kernels.quantize.LANE_COLS
+
+
+@jax.jit
+def _quant_ref(x):
+    from repro.kernels.ref import quantize_blocks_ref
+    return quantize_blocks_ref(x)
+
+
+@jax.jit
+def _dequant_ref(q, s):
+    from repro.kernels.ref import dequantize_blocks_ref
+    return dequantize_blocks_ref(q, s, out_dtype=jnp.float32)
+
+
+def _quantize(padded: np.ndarray):
+    if jax.default_backend() == "tpu":
+        from repro.kernels.quantize import quantize_blocks
+        return quantize_blocks(jnp.asarray(padded))
+    return _quant_ref(jnp.asarray(padded))
+
+
+def pack(arr: np.ndarray) -> bytes:
+    """arr: any-shape fp array -> packed int8 bytes."""
+    flat = np.ascontiguousarray(arr).reshape(-1).astype(np.float32)
+    n = flat.nbytes
+    rows = -(-flat.size // GROUP_COLS)
+    rows = -(-rows // 8) * 8   # ROW_BLK alignment
+    padded = np.zeros((rows, GROUP_COLS), np.float32)
+    padded.reshape(-1)[:flat.size] = flat
+    q, s = _quantize(padded)
+    return (HEADER.pack(MAGIC, n, rows, GROUP_COLS)
+            + np.asarray(q).tobytes() + np.asarray(s).tobytes())
+
+
+def unpack(raw: np.ndarray | bytes, orig_dtype: np.dtype) -> np.ndarray:
+    """Inverse of pack: returns flat uint8 view of the original bytes."""
+    buf = raw.tobytes() if isinstance(raw, np.ndarray) else bytes(raw)
+    magic, orig_nbytes, rows, cols = HEADER.unpack_from(buf, 0)
+    if magic != MAGIC:
+        raise ValueError("not a PQ8P quantized payload")
+    off = HEADER.size
+    q = np.frombuffer(buf, np.int8, rows * cols, off).reshape(rows, cols)
+    s = np.frombuffer(buf, np.float32, rows, off + rows * cols)
+    x = np.asarray(_dequant_ref(jnp.asarray(q), jnp.asarray(s)))
+    n_elem = orig_nbytes // np.dtype(orig_dtype).itemsize
+    return x.reshape(-1)[:n_elem].astype(orig_dtype).view(np.uint8)
+
+
+def is_packed(raw) -> bool:
+    try:
+        b = raw[:4].tobytes() if hasattr(raw, "tobytes") else bytes(raw[:4])
+        return struct.unpack("<I", b)[0] == MAGIC
+    except Exception:
+        return False

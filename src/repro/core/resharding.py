@@ -1,0 +1,110 @@
+"""Elastic restore planning: map wanted shard windows onto saved extents.
+
+Checkpoints record, per tensor, the *global* shape and each saved shard's
+(start, stop) window in global coordinates. Restoring onto a different mesh
+(different DP/TP degree, different pod count) means each new device wants a
+window that may intersect several saved shards. This module plans the reads:
+
+    wanted window ∩ saved shard  →  (read extent, src slice, dst slice)
+
+The fast path (same-mesh restore) degenerates to exact matches and the whole
+extent is read straight into the destination.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .manifest import ShardEntry, TensorRecord
+
+Index = tuple[tuple[int, int], ...]  # (start, stop) per dim
+
+
+def normalize_index(index, shape) -> Index:
+    """Accept jax-style tuples of slices or (start, stop) pairs."""
+    out = []
+    for i, d in enumerate(shape):
+        if index is None or i >= len(index):
+            out.append((0, d))
+            continue
+        p = index[i]
+        if isinstance(p, slice):
+            start = 0 if p.start is None else int(p.start)
+            stop = d if p.stop is None else int(p.stop)
+            out.append((start, stop))
+        else:
+            out.append((int(p[0]), int(p[1])))
+    return tuple(out)
+
+
+def intersect(a: Index, b: Index) -> Index | None:
+    out = []
+    for (a0, a1), (b0, b1) in zip(a, b):
+        lo, hi = max(a0, b0), min(a1, b1)
+        if lo >= hi:
+            return None
+        out.append((lo, hi))
+    return tuple(out)
+
+
+def window_shape(w: Index) -> tuple[int, ...]:
+    return tuple(hi - lo for lo, hi in w)
+
+
+@dataclass(frozen=True)
+class ReadPiece:
+    """One saved shard contributing to one wanted window."""
+    shard: ShardEntry
+    src: tuple[slice, ...]   # slice within the saved shard array
+    dst: tuple[slice, ...]   # slice within the wanted window array
+    exact: bool              # shard == wanted window (whole-extent fast path)
+
+
+def plan_window(record: TensorRecord, wanted: Index) -> list[ReadPiece]:
+    """All pieces needed to fill ``wanted``; raises if coverage is incomplete."""
+    pieces: list[ReadPiece] = []
+    covered = 0
+    for sh in record.shards:
+        inter = intersect(tuple(sh.index), wanted)
+        if inter is None:
+            continue
+        src = tuple(slice(lo - s0, hi - s0)
+                    for (lo, hi), (s0, _) in zip(inter, sh.index))
+        dst = tuple(slice(lo - w0, hi - w0)
+                    for (lo, hi), (w0, _) in zip(inter, wanted))
+        exact = tuple(sh.index) == wanted
+        pieces.append(ReadPiece(sh, src, dst, exact))
+        covered += int(np.prod(window_shape(inter), dtype=np.int64))
+    want_n = int(np.prod(window_shape(wanted), dtype=np.int64))
+    if covered < want_n:
+        raise ValueError(
+            f"checkpoint does not cover wanted window {wanted} of "
+            f"{record.key}: {covered}/{want_n} elements found")
+    return pieces
+
+
+def dedupe_shards(record: TensorRecord) -> list[ShardEntry]:
+    """Drop replicated saves of identical windows (DP replicas)."""
+    seen: dict[Index, ShardEntry] = {}
+    for sh in record.shards:
+        seen.setdefault(tuple(sh.index), sh)
+    return list(seen.values())
+
+
+def assemble(record: TensorRecord, wanted: Index, lookup) -> np.ndarray:
+    """Build the wanted window; ``lookup(shard) -> raw uint8 bytes``."""
+    try:
+        dtype = np.dtype(record.dtype)
+    except TypeError:
+        import ml_dtypes
+        dtype = np.dtype(getattr(ml_dtypes, record.dtype))
+    out = np.empty(window_shape(wanted), dtype=dtype)
+    for piece in plan_window(record, wanted):
+        sh = piece.shard
+        raw = lookup(sh)
+        n = int(np.prod(window_shape(tuple(sh.index)), dtype=np.int64))
+        arr = raw.view(dtype)[:n].reshape(window_shape(tuple(sh.index)))
+        out[piece.dst] = arr[piece.src]
+    return out

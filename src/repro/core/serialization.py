@@ -1,0 +1,131 @@
+"""Tensor extraction + "lean object" serialization (paper §2, stage 1).
+
+A checkpointable state is an arbitrary pytree. Tensors (jax.Array / numpy) are
+pre-serialized contiguous byte streams and bypass pickling entirely; everything
+else — step counters, python scalars, strings, dataloader state — is the "lean
+checkpoint object", pickled as one small blob.
+"""
+
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+LEAN_KEY = "__lean__"
+
+
+@dataclass(frozen=True)
+class TensorStub:
+    """Placeholder left in the lean object where a tensor was extracted."""
+    key: str
+    shape: tuple[int, ...]
+    dtype: str
+    is_prng_key: bool = False
+    prng_impl: str | None = None
+
+
+def path_str(path) -> str:
+    """Stable string form of a jax key path."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts) if parts else "<root>"
+
+
+def _is_tensor(x) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+def _is_typed_prng(x) -> bool:
+    return isinstance(x, jax.Array) and jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key)
+
+
+def extract_tensors(state):
+    """Split a pytree into ({key: tensor}, lean_tree_with_stubs).
+
+    Typed PRNG key arrays are stored as their uint32 key_data with the impl
+    recorded on the stub so restore can re-wrap them.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    tensors: dict[str, jax.Array | np.ndarray] = {}
+    lean_leaves = []
+    for path, leaf in flat:
+        if _is_tensor(leaf) and leaf.ndim == 0 and isinstance(leaf, np.ndarray):
+            # 0-d numpy scalars ride in the lean object (cheaper than an extent)
+            lean_leaves.append(leaf)
+            continue
+        if _is_typed_prng(leaf):
+            key = path_str(path)
+            impl = str(jax.random.key_impl(leaf))
+            data = jax.random.key_data(leaf)
+            tensors[key] = data
+            lean_leaves.append(TensorStub(key, tuple(data.shape),
+                                          str(data.dtype), True, impl))
+        elif _is_tensor(leaf):
+            key = path_str(path)
+            if key in tensors:
+                raise ValueError(f"duplicate tensor key {key}")
+            tensors[key] = leaf
+            lean_leaves.append(TensorStub(key, tuple(leaf.shape),
+                                          str(leaf.dtype)))
+        else:
+            lean_leaves.append(leaf)
+    lean_tree = jax.tree_util.tree_unflatten(treedef, lean_leaves)
+    return tensors, lean_tree
+
+
+def serialize_lean(lean_tree) -> bytes:
+    return pickle.dumps(lean_tree, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def deserialize_lean(data: bytes):
+    return pickle.loads(data)
+
+
+def reinsert_tensors(lean_tree, tensors: dict):
+    """Inverse of extract_tensors: replace stubs with loaded tensors."""
+    def sub(leaf):
+        if isinstance(leaf, TensorStub):
+            t = tensors[leaf.key]
+            if leaf.is_prng_key:
+                t = jax.random.wrap_key_data(t, impl=leaf.prng_impl)
+            return t
+        return leaf
+    return jax.tree_util.tree_map(
+        sub, lean_tree, is_leaf=lambda x: isinstance(x, TensorStub))
+
+
+def iter_stubs(lean_tree):
+    for leaf in jax.tree_util.tree_leaves(
+            lean_tree, is_leaf=lambda x: isinstance(x, TensorStub)):
+        if isinstance(leaf, TensorStub):
+            yield leaf
+
+
+def tensor_nbytes(t) -> int:
+    return int(np.dtype(t.dtype).itemsize) * int(np.prod(t.shape, dtype=np.int64))
+
+
+def to_numpy_view(t) -> np.ndarray:
+    """Zero-copy (when possible) contiguous numpy view of a host tensor."""
+    if isinstance(t, np.ndarray):
+        return np.ascontiguousarray(t)
+    return np.asarray(t)  # CPU jax.Array: usually zero-copy
+
+
+def as_bytes_view(arr: np.ndarray) -> np.ndarray:
+    """Flat uint8 reinterpretation (buffer-protocol safe for ml_dtypes)."""
+    arr = np.ascontiguousarray(arr)
+    if arr.ndim == 0:
+        arr = arr.reshape(1)
+    return arr.view(np.uint8).reshape(-1)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, PipelineState, SyntheticPipeline
+
+__all__ = ["DataConfig", "PipelineState", "SyntheticPipeline"]

@@ -1,0 +1,64 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute via the Pallas
+interpreter on CPU for validation; on TPU they compile to Mosaic).
+Arbitrary-shaped tensors are padded/reshaped to the kernels' tile layout here
+so callers never deal with lane alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as Q
+from . import rglru as R
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------- quantize
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_tensor(x, *, interpret: bool | None = None):
+    """Quantize any tensor to (int8 payload, f32 scales, meta) blockwise."""
+    interpret = _default_interpret() if interpret is None else interpret
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = Q.LANE_COLS
+    rows = -(-n // cols)
+    rows_pad = -(-rows // Q.ROW_BLK) * Q.ROW_BLK
+    padded = jnp.zeros((rows_pad * cols,), jnp.float32).at[:n].set(
+        flat.astype(jnp.float32)).reshape(rows_pad, cols)
+    q, s = Q.quantize_blocks(padded, interpret=interpret)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "interpret"))
+def dequantize_tensor(q, s, shape, dtype=jnp.bfloat16, *,
+                      interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    full = Q.dequantize_blocks(q, s, out_dtype=dtype, interpret=interpret)
+    n = int(np.prod(shape))
+    return full.reshape(-1)[:n].reshape(shape)
+
+
+# ------------------------------------------------------------------ rglru
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, b, *, interpret: bool | None = None):
+    """Padded/tiled entry to the fused RG-LRU scan kernel."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, Rr = a.shape
+    Sp = -(-S // R.SEQ_CHUNK) * R.SEQ_CHUNK
+    Rp = -(-Rr // R.FEAT_BLK) * R.FEAT_BLK
+    if (Sp, Rp) != (S, Rr):
+        pad = [(0, 0), (0, Sp - S), (0, Rp - Rr)]
+        a = jnp.pad(a.astype(jnp.float32), pad)
+        b = jnp.pad(b.astype(jnp.float32), pad)
+    h = R.rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32),
+                     interpret=interpret)
+    return h[:, :S, :Rr]

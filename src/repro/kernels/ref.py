@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_blocks_ref(x):
+    """x: (R, C) -> (int8 (R, C), f32 scales (R,)); one group per row."""
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blocks_ref(q, scales, out_dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scales[:, None].astype(jnp.float32)
+            ).astype(out_dtype)
+
+
+def rglru_scan_ref(a, b):
+    """First-order linear recurrence h_t = a_t * h_{t-1} + b_t, h_0 = 0.
+
+    Uses jax.lax.associative_scan — the XLA path the kernel replaces.
+    """
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+    _, h = jax.lax.associative_scan(comb, (a.astype(jnp.float32),
+                                           b.astype(jnp.float32)), axis=1)
+    return h

@@ -1,0 +1,634 @@
+"""Functional layer library: init/apply pairs over plain dict pytrees.
+
+Covers every assigned architecture's needs: RMSNorm, rotary embeddings, GQA
+attention (qk-norm, qkv-bias, logit softcap, sliding window, KV cache), gated
+MLP, capacity-based top-k MoE (expert-parallel friendly), RG-LRU, mLSTM and
+sLSTM blocks. All matmul compute runs in ``cfg.dtype`` (bf16 by default) with
+fp32 softmax/normalization/recurrence states.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(cfg: ModelConfig, dim: int | None = None):
+    return {"scale": jnp.ones((dim or cfg.d_model,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + variants), with optional KV cache
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(ks[0], (d, qd)),
+        "wk": dense_init(ks[1], (d, kvd)),
+        "wv": dense_init(ks[2], (d, kvd)),
+        "wo": dense_init(ks[3], (qd, d)),
+        "norm1": rmsnorm_init(cfg),
+        "norm2": rmsnorm_init(cfg),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg, cfg.head_dim)
+        p["k_norm"] = rmsnorm_init(cfg, cfg.head_dim)
+    return p
+
+
+def _softcap(logits, cap: float):
+    if cap > 0:
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def attention_scores(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,Sq,H,D), k/v: (B,Skv,KV,D); returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / np.sqrt(D)
+    logits = _softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def causal_mask(Sq: int, Skv: int, q_offset, window: int = 0):
+    """(1, Sq, Skv) bool; window>0 limits lookback (local attention)."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, :, :]
+
+
+ATTN_CHUNK = 1024  # query-chunk size for memory-bounded attention
+
+
+def chunked_attention(q, k, v, cfg: ModelConfig, window: int,
+                      chunk: int = ATTN_CHUNK):
+    """Causal attention with O(S·chunk) live memory via a query-chunk scan.
+
+    The (B, chunk, Skv) logit tile is the only quadratic-ish intermediate —
+    this is the XLA-level analogue of flash attention's tiling and what makes
+    the 4k/32k dry-run cells fit per-device HBM (see DESIGN.md).
+    """
+    B, S, H, D = q.shape
+    if S <= chunk:
+        return attention_scores(q, k, v, causal_mask(S, S, 0, window), cfg)
+    pad = (-S) % chunk   # frontend prefixes make S non-chunk-divisible
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (S + pad) // chunk
+    qs = q.reshape(B, nq, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    offs = jnp.arange(nq) * chunk
+
+    def body(_, xs):
+        qc, off = xs
+        mask = causal_mask(chunk, S, off, window)
+        return None, attention_scores(qc, k, v, mask, cfg)
+
+    _, outs = jax.lax.scan(body, None, (qs, offs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, D)
+    return out[:, :S]
+
+
+def attention_apply(params, x, cfg: ModelConfig, *, positions, local: bool,
+                    cache=None):
+    """Pre-norm attention block with residual. cache: dict(k,v,pos) or None."""
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    B, S, _ = h.shape
+    q = h @ params["wq"].astype(h.dtype)
+    k = h @ params["wk"].astype(h.dtype)
+    v = h @ params["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(h.dtype)
+        k = k + params["bk"].astype(h.dtype)
+        v = v + params["bv"].astype(h.dtype)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window if local else 0
+    new_cache = None
+    if cache is None:
+        out = chunked_attention(q, k, v, cfg, window)
+    else:
+        # decode: S == 1; insert into cache ring/linear buffer, attend over it.
+        # Slot validity/positions are ANALYTIC (no stored kpos array): for the
+        # ring buffer, slot s holds position pos - ((pos - s) mod W); for the
+        # linear buffer, slot s holds position s.
+        ck, cv, pos = cache["k"], cache["v"], cache["pos"]
+        W = ck.shape[1]
+        slot = pos % W if window > 0 else jnp.minimum(pos, W - 1)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        slots = jnp.arange(W, dtype=jnp.int32)[None, :]        # (1, W)
+        cur = positions[:, :1]                                 # (B, 1)
+        if window > 0:
+            kpos = cur - jnp.remainder(cur - slots, W)
+        else:
+            kpos = jnp.broadcast_to(slots, (cur.shape[0], W))
+        valid = (kpos >= 0) & (kpos <= cur)
+        if window > 0:
+            valid &= kpos > cur - window
+        mask = valid[:, None, :]
+        out = attention_scores(q, ck, cv, mask, cfg)
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(x.dtype)
+    return x + out, new_cache
+
+
+def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                         local: bool):
+    W = min(cfg.sliding_window, max_len) if (local and cfg.sliding_window) \
+        else max_len
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {"wg": dense_init(ks[0], (d, f)),
+            "wu": dense_init(ks[1], (d, f)),
+            "wd": dense_init(ks[2], (f, d))}
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    a = act_fn(cfg.act)
+    h = a(x @ params["wg"].astype(x.dtype)) * (x @ params["wu"].astype(x.dtype))
+    return h @ params["wd"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-based dropping, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    return {
+        "router": dense_init(ks[0], (d, E), scale=0.02),
+        "wg": dense_init(ks[1], (E, d, f)),
+        "wu": dense_init(ks[2], (E, d, f)),
+        "wd": dense_init(ks[3], (E, f, d)),
+    }
+
+
+def moe_apply(params, x, cfg: ModelConfig, capacity_factor: float | None = None):
+    """x: (B,S,d) -> (B,S,d), aux_loss. Dropping implementation (GShard-style)
+    with scatter dispatch into an (E, C, d) buffer — expert dim shards over the
+    'model' mesh axis (expert parallelism)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gates, idx = jax.lax.top_k(probs, k)                         # (T, k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # capacity floor protects tiny (decode) batches from pathological drops
+    C = max(int(np.ceil(T * k / E * capacity_factor)), min(T, 4 * k))
+    e_flat = idx.reshape(-1)                                     # (T*k,)
+    g_flat = gates.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T), k)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)          # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.sum(pos * onehot, axis=-1)                         # (T*k,)
+    keep = pos < C
+    pos = jnp.where(keep, pos, C - 1)
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    contrib = jnp.where(keep[:, None], xt[t_flat], 0)
+    buf = buf.at[e_flat, pos].add(contrib)
+
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wu"].astype(x.dtype))
+    h = jnp.einsum("ecf,efd->ecd", h, params["wd"].astype(x.dtype))
+
+    y = h[e_flat, pos] * g_flat[:, None].astype(x.dtype)
+    y = jnp.where(keep[:, None], y, 0)
+    out = jnp.zeros((T, d), x.dtype).at[t_flat].add(y)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Transformer block = attention + (MLP | MoE)
+# ---------------------------------------------------------------------------
+
+def transformer_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = attention_init(k1, cfg)
+    if cfg.is_moe:
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def transformer_block_apply(params, x, cfg: ModelConfig, *, positions,
+                            local: bool, cache=None):
+    x, new_cache = attention_apply(params, x, cfg, positions=positions,
+                                   local=local, cache=cache)
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_apply(params["moe"], h, cfg)
+    else:
+        y, aux = mlp_apply(params["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma) — gated linear recurrence + gated MLP
+# ---------------------------------------------------------------------------
+
+def rglru_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, r = cfg.d_model, cfg.lru_dim
+    return {
+        "wx": dense_init(ks[0], (d, r)),
+        "wgate": dense_init(ks[1], (d, r)),
+        "wout": dense_init(ks[2], (r, d)),
+        # recurrence parameters (per-channel)
+        "a_param": jnp.full((r,), 4.0, jnp.float32),    # Λ via softplus-ish
+        "w_input_gate": dense_init(ks[3], (d, r), scale=0.02),
+        "b_input_gate": jnp.zeros((r,), jnp.float32),
+        "w_a_gate": dense_init(ks[4], (d, r), scale=0.02),
+        "b_a_gate": jnp.zeros((r,), jnp.float32),
+        "norm1": rmsnorm_init(cfg),
+        "norm2": rmsnorm_init(cfg),
+        "mlp": {"wg": dense_init(ks[5], (d, cfg.d_ff)),
+                "wu": dense_init(ks[6], (d, cfg.d_ff)),
+                "wd": dense_init(jax.random.fold_in(key, 9),
+                                 (cfg.d_ff, d))},
+    }
+
+
+def _rglru_coeffs(params, u):
+    """u: (...,d_model) pre-norm input. Returns (a, bx) fp32 of lru_dim."""
+    c = 8.0
+    ig = jax.nn.sigmoid((u @ params["w_input_gate"].astype(u.dtype)
+                         ).astype(jnp.float32) + params["b_input_gate"])
+    ag = jax.nn.sigmoid((u @ params["w_a_gate"].astype(u.dtype)
+                         ).astype(jnp.float32) + params["b_a_gate"])
+    log_a = -c * ag * jax.nn.softplus(params["a_param"])
+    a = jnp.exp(log_a)
+    x = (u @ params["wx"].astype(u.dtype)).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-8))
+    return a, beta * ig * x
+
+
+def rglru_apply(params, x, cfg: ModelConfig, *, positions=None, local=False,
+                cache=None):
+    """Parallel (associative-scan) for sequences; recurrent for decode."""
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    a, bx = _rglru_coeffs(params, h)                  # (B,S,r) fp32
+    if cache is None:
+        # first-order linear recurrence via associative scan over S
+        def comb(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, br + ar * bl
+        aa, hh = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        new_cache = None
+    else:
+        h_prev = cache["h"]                            # (B,1,r)
+        hh = a * h_prev + bx
+        new_cache = {"h": hh}
+    gate = jax.nn.silu((h @ params["wgate"].astype(h.dtype)))
+    y = (hh.astype(x.dtype) * gate) @ params["wout"].astype(x.dtype)
+    x = x + y
+    # MLP half
+    h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    act = act_fn(cfg.act)
+    m = act(h2 @ params["mlp"]["wg"].astype(x.dtype)) * \
+        (h2 @ params["mlp"]["wu"].astype(x.dtype))
+    x = x + m @ params["mlp"]["wd"].astype(x.dtype)
+    return x, new_cache
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int):
+    return {"h": jnp.zeros((batch, 1, cfg.lru_dim), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory; chunked-parallel for sequences
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    up = int(cfg.proj_factor * d)
+    hd = up // cfg.num_heads
+    return {
+        "w_up1": dense_init(ks[0], (d, up)),
+        "w_up2": dense_init(ks[1], (d, up)),
+        "w_down": dense_init(ks[2], (up, d)),
+        "wq": dense_init(ks[3], (up, up)),
+        "wk": dense_init(ks[4], (up, up)),
+        "wv": dense_init(ks[5], (up, up)),
+        "w_igate": dense_init(ks[6], (up, cfg.num_heads), scale=0.02),
+        "b_igate": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "w_fgate": dense_init(ks[7], (up, cfg.num_heads), scale=0.02),
+        "b_fgate": jnp.full((cfg.num_heads,), 3.0, jnp.float32),
+        "norm1": rmsnorm_init(cfg),
+        "out_norm": rmsnorm_init(cfg, hd),
+    }
+
+
+def _mlstm_qkv(params, h, cfg):
+    B, S, up = h.shape
+    H = cfg.num_heads
+    hd = up // H
+    q = (h @ params["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+    k = (h @ params["wk"].astype(h.dtype)).reshape(B, S, H, hd) / np.sqrt(hd)
+    v = (h @ params["wv"].astype(h.dtype)).reshape(B, S, H, hd)
+    logi = (h @ params["w_igate"].astype(h.dtype)).astype(jnp.float32) \
+        + params["b_igate"]                              # (B,S,H)
+    logf = jax.nn.log_sigmoid(
+        (h @ params["w_fgate"].astype(h.dtype)).astype(jnp.float32)
+        + params["b_fgate"])                             # (B,S,H)
+    return q, k, v, logi, logf
+
+
+def _mlstm_intra(q, k, v, logi, logf):
+    """Unnormalized intra-chunk mLSTM pieces (for exact chunkwise merging).
+
+    Returns (num (B,S,H,D), den (B,S,H), m_intra (B,S,H), F (B,S,H)) where
+    num/den carry stabilizer exp(·−m_intra) and F is the in-chunk cumulative
+    log-forget."""
+    F = jnp.cumsum(logf, axis=1)                          # (B,S,H)
+    # log decay matrix: D[t,s] = F_t - F_s + i_s  for s <= t
+    dmat = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+    S = q.shape[1]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)   # (B,T,S,H)
+    m = jnp.max(dmat, axis=2)                             # (B,T,H)
+    dexp = jnp.exp(dmat - m[:, :, None, :])               # (B,T,S,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    w = scores * dexp
+    num = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    den = jnp.sum(w, axis=2)                              # (B,T,H)
+    return num, den, m, F
+
+
+def mlstm_sequence(q, k, v, logi, logf):
+    """Stabilized quadratic-parallel mLSTM over a (chunk of) sequence.
+
+    q,k,v: (B,S,H,D); logi,logf: (B,S,H). Returns (B,S,H,D).
+    Matches the xLSTM paper's parallel formulation.
+    """
+    num, den, m, _ = _mlstm_intra(q, k, v, logi, logf)
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+    return num / (norm[..., None] + 1e-6)
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, *, positions=None, local=False,
+                cache=None, chunk: int = 256):
+    h0 = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    u1 = h0 @ params["w_up1"].astype(x.dtype)
+    u2 = jax.nn.silu(h0 @ params["w_up2"].astype(x.dtype))
+    q, k, v, logi, logf = _mlstm_qkv(params, u1, cfg)
+    B, S, H, D = q.shape
+    if cache is None:
+        # NOTE: O(S·chunk) memory via chunking would be the production path;
+        # the quadratic parallel form is used for S <= chunk and the
+        # recurrent scan for longer sequences (TPU adaptation of the paper's
+        # chunkwise formulation).
+        if S <= chunk:
+            out = mlstm_sequence(q, k, v, logi, logf)
+        else:
+            out = _mlstm_chunked(q, k, v, logi, logf, chunk)
+        new_cache = None
+    else:
+        Cst, Nst, Mst = cache["C"], cache["N"], cache["M"]  # (B,H,D,D),(B,H,D),(B,H)
+        lf, li = logf[:, 0], logi[:, 0]                     # (B,H)
+        m_new = jnp.maximum(lf + Mst, li)
+        alpha = jnp.exp(lf + Mst - m_new)[..., None]
+        beta = jnp.exp(li - m_new)[..., None]
+        k1, v1, q1 = k[:, 0], v[:, 0], q[:, 0]               # (B,H,D)
+        Cst = Cst * alpha[..., None] + \
+            beta[..., None] * k1[..., :, None] * v1[..., None, :]
+        Nst = Nst * alpha + beta * k1
+        qf = q1.astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qf, Cst)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, Nst)),
+                          jnp.exp(-m_new))
+        out = (num / (den[..., None] + 1e-6))[:, None]   # (B,1,H,D)
+        new_cache = {"C": Cst, "N": Nst, "M": m_new}
+    out = rmsnorm(params["out_norm"], out, cfg.norm_eps)
+    out = out.reshape(B, S, H * D).astype(x.dtype) * u2
+    return x + out @ params["w_down"].astype(x.dtype), new_cache
+
+
+def _mlstm_chunked(q, k, v, logi, logf, chunk: int):
+    """EXACT chunkwise mLSTM: quadratic within chunks, recurrent stabilized
+    (C, N, M) state across chunks — the TPU-friendly O(S·chunk) form.
+
+    State convention: C = Σ_s k_s v_sᵀ exp(F_end − F_s + i_s − M) (N likewise)
+    where M is the running max-exponent at the chunk boundary.
+    """
+    B, S, H, D = q.shape
+    nC = S // chunk
+    assert S % chunk == 0, "sequence must be chunk-divisible"
+    qs = q.reshape(B, nC, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nC, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nC, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    lis = logi.reshape(B, nC, chunk, H).transpose(1, 0, 2, 3)
+    lfs = logf.reshape(B, nC, chunk, H).transpose(1, 0, 2, 3)
+    NEG = -1e30   # log(0) stand-in that survives arithmetic
+
+    def step(carry, xs):
+        C, N, M = carry                      # (B,H,D,D), (B,H,D), (B,H)
+        qc, kc, vc, lic, lfc = xs            # (B,chunk,H,*)
+        num_i, den_i, m_i, F = _mlstm_intra(qc, kc, vc, lic, lfc)
+        m_i = jnp.maximum(m_i, NEG)
+        qf = qc.astype(jnp.float32)
+        # per-position exponent of the carry-state contribution
+        m_state = F + M[:, None, :]                         # (B,c,H)
+        m_tot = jnp.maximum(m_i, m_state)
+        a_i = jnp.exp(m_i - m_tot)                          # (B,c,H)
+        a_s = jnp.exp(m_state - m_tot)
+        num = num_i * a_i[..., None] + \
+            a_s[..., None] * jnp.einsum("bchd,bhde->bche", qf, C)
+        den = den_i * a_i + a_s * jnp.einsum("bchd,bhd->bch", qf, N)
+        out = num / (jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+                     + 1e-6)
+        # state update to the chunk end, re-stabilized at M_new
+        Ftot = F[:, -1]                                     # (B,H)
+        m_new_local = jnp.max(Ftot[:, None, :] - F + lic, axis=1)  # (B,H)
+        M_new = jnp.maximum(M + Ftot, m_new_local)
+        dk = jnp.exp(Ftot[:, None, :] - F + lic - M_new[:, None, :])
+        kc_f = kc.astype(jnp.float32) * dk[..., None]
+        scale_old = jnp.exp(M + Ftot - M_new)
+        C = C * scale_old[..., None, None] + \
+            jnp.einsum("bchd,bche->bhde", kc_f, vc.astype(jnp.float32))
+        N = N * scale_old[..., None] + jnp.sum(kc_f, axis=1)
+        return (C, N, M_new), out
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    N0 = jnp.zeros((B, H, D), jnp.float32)
+    M0 = jnp.full((B, H), NEG, jnp.float32)
+    (_, _, _), outs = jax.lax.scan(step, (C0, N0, M0),
+                                   (qs, ks, vs, lis, lfs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    up = int(cfg.proj_factor * cfg.d_model)
+    hd = up // cfg.num_heads
+    return {"C": jnp.zeros((batch, cfg.num_heads, hd, hd), jnp.float32),
+            "N": jnp.zeros((batch, cfg.num_heads, hd), jnp.float32),
+            "M": jnp.zeros((batch, cfg.num_heads), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, sequential scan
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    up = int(cfg.proj_factor * d)
+    p = {"norm1": rmsnorm_init(cfg)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = dense_init(ks[i], (d, d))
+        p[f"r_{g}"] = dense_init(ks[4 + i], (d, d), scale=0.02)
+        p[f"b_{g}"] = (jnp.full((d,), 1.0, jnp.float32) if g == "f"
+                       else jnp.zeros((d,), jnp.float32))
+    p["w_up"] = dense_init(ks[8], (d, up))
+    p["w_down"] = dense_init(ks[9], (up, d))
+    return p
+
+
+def _slstm_step(params, carry, x_t):
+    """x_t: (B,d) fp32 pre-activations base; carry: (c,n,m,h)."""
+    c, n, m, h = carry
+    pre = lambda g: (x_t @ params[f"w_{g}"] + h @ params[f"r_{g}"]
+                     + params[f"b_{g}"])
+    it, ft = pre("i"), pre("f")
+    zt = jnp.tanh(pre("z"))
+    ot = jax.nn.sigmoid(pre("o"))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c = f_ * c + i_ * zt
+    n = f_ * n + i_
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def slstm_apply(params, x, cfg: ModelConfig, *, positions=None, local=False,
+                cache=None):
+    h0 = rmsnorm(params["norm1"], x, cfg.norm_eps).astype(jnp.float32)
+    B, S, d = h0.shape
+    w = {k: v.astype(jnp.float32) for k, v in params.items()
+         if k.startswith(("w_", "r_", "b_")) and not k.endswith(("up", "down"))}
+    w["w_up"], w["w_down"] = params["w_up"], params["w_down"]
+    if cache is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        carry0 = (c0, c0, c0, c0)
+        (cN, nN, mN, hN), hs = jax.lax.scan(
+            lambda c, xt: _slstm_step(w, c, xt),
+            carry0, h0.transpose(1, 0, 2))
+        out = hs.transpose(1, 0, 2)
+        new_cache = None
+    else:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+        carry, out = _slstm_step(w, carry, h0[:, 0])
+        out = out[:, None, :]
+        new_cache = dict(zip(("c", "n", "m", "h"), carry))
+    up = jax.nn.gelu(out.astype(x.dtype) @ params["w_up"].astype(x.dtype))
+    return x + up @ params["w_down"].astype(x.dtype), new_cache
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}

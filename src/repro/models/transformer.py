@@ -1,0 +1,199 @@
+"""Decoder-LM assembly: embeddings, scanned heterogeneous blocks, head.
+
+Layers are scanned GROUP-wise: the block pattern (e.g. recurrentgemma's
+(rglru, rglru, attn_local)) forms one group whose params are stacked across
+``num_groups`` repetitions, and ``jax.lax.scan`` iterates groups. This keeps
+the lowered HLO O(pattern) instead of O(num_layers) — essential for the
+512-device dry-run compiles — and is remat-friendly (one policy per group).
+
+Modality frontends (audio frames / vision patches) are STUBS per the
+assignment: ``frontend_embeds`` arrive precomputed and a learned projector
+maps them into d_model as a prefix to the token embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import (ATTN, ATTN_LOCAL, MLSTM, RGLRU, SLSTM, ATTENTION_KINDS,
+                     ModelConfig)
+
+BLOCK_INIT = {
+    ATTN: L.transformer_block_init,
+    ATTN_LOCAL: L.transformer_block_init,
+    MLSTM: L.mlstm_init,
+    SLSTM: L.slstm_init,
+    RGLRU: L.rglru_init,
+}
+
+
+def init_params(key, cfg: ModelConfig):
+    """Full parameter pytree. Per-group block params stacked on axis 0."""
+    keys = jax.random.split(key, 4 + cfg.num_layers)
+    params = {
+        "embed": L.dense_init(keys[0], (cfg.vocab_size, cfg.d_model), 0.02),
+        "final_norm": L.rmsnorm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(keys[1], (cfg.d_model, cfg.vocab_size))
+    if cfg.frontend:
+        params["frontend_proj"] = L.dense_init(
+            keys[2], (cfg.frontend_dim, cfg.d_model))
+
+    blocks = []
+    ki = iter(keys[4:])
+    for g in range(cfg.num_groups):
+        group = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            group[f"b{j}_{kind}"] = BLOCK_INIT[kind](next(ki), cfg)
+        blocks.append(group)
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+def cast_params(params, dtype):
+    """Cast matmul weights to compute dtype; keep norms/gates fp32."""
+    def cast(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("scale",) or name.startswith("b_") or \
+                name in ("a_param",):
+            return x
+        return x.astype(dtype)
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+CACHE_INIT = {
+    ATTN: lambda cfg, b, m: L.attention_cache_init(cfg, b, m, local=False),
+    ATTN_LOCAL: lambda cfg, b, m: L.attention_cache_init(cfg, b, m, local=True),
+    MLSTM: lambda cfg, b, m: L.mlstm_cache_init(cfg, b),
+    SLSTM: lambda cfg, b, m: L.slstm_cache_init(cfg, b),
+    RGLRU: lambda cfg, b, m: L.rglru_cache_init(cfg, b),
+}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked (per-group) decode caches matching the scan structure."""
+    groups = []
+    for g in range(cfg.num_groups):
+        group = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            group[f"b{j}_{kind}"] = CACHE_INIT[kind](cfg, batch, max_len)
+        groups.append(group)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, params, x, cfg, positions, cache):
+    if kind in ATTENTION_KINDS:
+        x, nc, aux = L.transformer_block_apply(
+            params, x, cfg, positions=positions,
+            local=(kind == ATTN_LOCAL), cache=cache)
+        return x, nc, aux
+    fn = {MLSTM: L.mlstm_apply, SLSTM: L.slstm_apply, RGLRU: L.rglru_apply}[kind]
+    x, nc = fn(params, x, cfg, positions=positions,
+               local=(kind == ATTN_LOCAL), cache=cache)
+    return x, nc, jnp.zeros((), jnp.float32)
+
+
+def _group_fn(cfg: ModelConfig, decode: bool, act_sharding=None):
+    def group(carry, scanned):
+        x, positions = carry
+        gparams = scanned["params"]
+        gcache = scanned.get("cache")
+        new_cache = {}
+        aux_total = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(cfg.block_pattern):
+            name = f"b{j}_{kind}"
+            cache_j = gcache[name] if gcache is not None else None
+            x, nc, aux = _apply_block(kind, gparams[name], x, cfg,
+                                      positions, cache_j)
+            if act_sharding is not None:
+                # pin the residual stream layout (batch over DP) so the scan's
+                # saved carries stay batch-sharded instead of whatever GSPMD
+                # propagates from the params
+                x = jax.lax.with_sharding_constraint(x, act_sharding)
+            aux_total = aux_total + aux
+            if nc is not None:
+                new_cache[name] = nc
+        out = {"aux": aux_total}
+        if decode:
+            out["cache"] = new_cache
+        return (x, positions), out
+    return group
+
+
+def _embed(params, cfg: ModelConfig, tokens, frontend_embeds=None):
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.family in ("vlm", "audio") and cfg.frontend and \
+            frontend_embeds is not None:
+        proj = frontend_embeds.astype(x.dtype) @ \
+            params["frontend_proj"].astype(x.dtype)
+        x = jnp.concatenate([proj, x], axis=1)
+    if cfg.attn_softcap:      # gemma-style embedding scaling
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(h.dtype).T
+    else:
+        logits = h @ params["head"].astype(h.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None,
+            return_hidden: bool = False, act_sharding=None):
+    """Training/prefill forward: tokens (B,S) -> logits (B,S_total,V), aux.
+
+    ``return_hidden=True`` skips the unembed (the training loss computes it
+    chunk-wise to bound fp32 logit memory). ``act_sharding`` pins the
+    residual-stream layout at production scale."""
+    x = _embed(params, cfg, tokens, frontend_embeds)
+    if act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, act_sharding)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    group = _group_fn(cfg, decode=False, act_sharding=act_sharding)
+    if cfg.remat:
+        group = jax.checkpoint(group,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    (x, _), outs = jax.lax.scan(group, (x, positions),
+                                {"params": params["blocks"]})
+    aux = jnp.sum(outs["aux"])
+    if return_hidden:
+        return x, aux
+    return _unembed(params, cfg, x), aux
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One-token decode: tokens (B,1), pos (B,1) absolute positions.
+
+    cache is the stacked per-group cache from ``init_cache``. Returns
+    (logits (B,1,V), new_cache).
+    """
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.attn_softcap:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    group = _group_fn(cfg, decode=True)
+    (x, _), outs = jax.lax.scan(group, (x, pos),
+                                {"params": params["blocks"], "cache": cache})
+    logits = _unembed(params, cfg, x)
+    return logits, outs["cache"]

@@ -1,0 +1,151 @@
+"""jit-able train / prefill / decode step factories.
+
+``make_train_step`` builds the pjit'd update (fwd + bwd + AdamW); callers
+provide in/out shardings from repro.sharding.partition. ``make_serve_step``
+builds the one-token decode used by the decode_* / long_* dry-run cells.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, apply_updates
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) fp32, labels (B,S) int32 -> scalar mean nll."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+CE_CHUNK = 512  # sequence chunk for the unembed+CE scan
+
+
+def chunked_cross_entropy(params, cfg: ModelConfig, h, labels,
+                          chunk: int = CE_CHUNK):
+    """Unembed + CE without materializing (B,S,V) fp32 logits.
+
+    Scans sequence chunks: each step computes (B,chunk,V) logits, reduces to
+    per-token nll, and discards them — peak live logits drop by S/chunk
+    (e.g. 2.5 GB → 0.3 GB/device on qwen3-32b train_4k)."""
+    from repro.models.transformer import _unembed
+    B, S, _ = h.shape
+    if S <= chunk:
+        return cross_entropy(_unembed(params, cfg, h), labels)
+    assert S % chunk == 0
+    hs = h.reshape(B, S // chunk, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, S // chunk, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hc, lc = xs
+        logits = _unembed(params, cfg, hc)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * S)
+
+
+def make_loss_fn(cfg: ModelConfig, act_sharding=None):
+    def loss_fn(params, batch):
+        h, aux = T.forward(params, cfg, batch["tokens"],
+                           batch.get("frontend_embeds"), return_hidden=True,
+                           act_sharding=act_sharding)
+        S = batch["labels"].shape[1]
+        nll = chunked_cross_entropy(params, cfg, h[:, -S:, :],
+                                    batch["labels"])
+        loss = nll + cfg.router_aux_coef * aux
+        return loss, {"nll": nll, "aux": aux}
+    return loss_fn
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from repro.optim import init_state
+    params = T.init_params(key, cfg)
+    params = T.cast_params(params, jnp.dtype(cfg.dtype))
+    return {"params": params, "opt": init_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    microbatches: int = 1, grad_shardings=None,
+                    act_sharding=None):
+    """fwd+bwd+AdamW. ``microbatches`` > 1 scans gradient-accumulation
+    microbatches so live activations are O(batch/microbatches) — required to
+    fit the 4k×256 training cells in per-device HBM at production scale.
+
+    ``grad_shardings`` (a pytree of NamedShardings, typically the ZeRO-1
+    moment shardings) additionally shards the fp32 grad accumulator over the
+    data axis (ZeRO-2): GSPMD turns the per-microbatch gradient all-reduce
+    into a reduce-scatter against the accumulator."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(cfg, act_sharding=act_sharding)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, grad_shardings)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            (loss, extras), grads = grad_fn(params, batch)
+        else:
+            mb_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, ex), g = grad_fn(params, mb)
+                g = _constrain(g)   # reduce-scatter grads before accumulating
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (_constrain(g_acc), l_acc + l, a_acc + ex["aux"]), None
+
+            g0 = _constrain(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (g_acc, l_acc, a_acc), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), mb_batch)
+            inv = 1.0 / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, g_acc)
+            loss = l_acc * inv
+            extras = {"nll": loss, "aux": a_acc * inv}
+        new_params, new_opt, om = apply_updates(
+            opt_cfg, params, grads, state["opt"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **extras, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, act_sharding=None):
+    """Inference prefill: returns only the LAST position's logits (what the
+    decoder needs to emit its first token) — materializing (B,S,V) fp32
+    logits at 32k context would dominate per-device HBM for nothing."""
+    def prefill(params, batch):
+        h, _ = T.forward(params, cfg, batch["tokens"],
+                         batch.get("frontend_embeds"), return_hidden=True,
+                         act_sharding=act_sharding)
+        from repro.models.transformer import _unembed
+        return _unembed(params, cfg, h[:, -1:, :])
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One new token against an existing decode cache."""
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cfg, cache, tokens, pos)
+    return serve_step

@@ -1,0 +1,90 @@
+"""Aggregation planners: layout invariants under all three strategies."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (ObjectSpec, Strategy, coalesce,
+                                    plan_layout, rank_padded_total,
+                                    single_file_base_offsets)
+
+ALIGN = 4096
+
+
+def _objects(sizes):
+    return [ObjectSpec(f"t{i}", n) for i, n in enumerate(sizes)]
+
+
+sizes_strategy = st.lists(st.integers(0, 1 << 22), min_size=1, max_size=40)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes=sizes_strategy,
+       strategy=st.sampled_from(list(Strategy)))
+def test_plan_covers_all_objects_without_overlap(sizes, strategy):
+    objs = _objects(sizes)
+    totals = [rank_padded_total(objs, ALIGN)]
+    plan = plan_layout(objs, strategy, rank=0, rank_totals=totals,
+                       align=ALIGN)
+    assert {e.key for e in plan.extents} == {o.key for o in objs}
+    # per-file extents must be aligned and non-overlapping
+    for path, extents in plan.by_file().items():
+        end = 0
+        for e in extents:
+            assert e.offset % ALIGN == 0
+            assert e.offset >= end
+            end = e.offset + e.nbytes
+            assert end <= plan.file_sizes[path] or e.nbytes == 0
+    by_key = {e.key: e for e in plan.extents}
+    for o in objs:
+        assert by_key[o.key].nbytes == o.nbytes
+
+
+@settings(max_examples=40, deadline=None)
+@given(rank_sizes=st.lists(sizes_strategy, min_size=2, max_size=5))
+def test_single_file_ranks_disjoint(rank_sizes):
+    """Property: ranks' extents in the shared file never overlap."""
+    all_objs = [_objects(s) for s in rank_sizes]
+    totals = [rank_padded_total(o, ALIGN) for o in all_objs]
+    spans = []
+    for r, objs in enumerate(all_objs):
+        plan = plan_layout(objs, Strategy.SINGLE_FILE, rank=r,
+                           rank_totals=totals, align=ALIGN)
+        lo = min((e.offset for e in plan.extents), default=0)
+        hi = max((e.offset + e.nbytes for e in plan.extents), default=0)
+        spans.append((lo, hi))
+    bases = single_file_base_offsets(totals, ALIGN)
+    for r, (lo, hi) in enumerate(spans):
+        assert lo >= bases[r]
+        if r + 1 < len(bases):
+            assert hi <= bases[r + 1]
+
+
+def test_file_counts_per_strategy():
+    objs = _objects([100, 200, 300])
+    assert plan_layout(objs, Strategy.FILE_PER_TENSOR).num_files == 3
+    assert plan_layout(objs, Strategy.FILE_PER_PROCESS).num_files == 1
+    assert plan_layout(objs, Strategy.SINGLE_FILE, rank=0,
+                       rank_totals=[rank_padded_total(objs)]).num_files == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes=sizes_strategy, threshold=st.sampled_from(
+    [1 << 12, 1 << 16, 1 << 20, 1 << 24]))
+def test_coalesce_groups_are_contiguous(sizes, threshold):
+    """Property: every coalesced group is file-contiguous and preserves all
+    extents exactly once."""
+    objs = _objects(sizes)
+    plan = plan_layout(objs, Strategy.FILE_PER_PROCESS, align=ALIGN)
+    groups = coalesce(plan.extents, threshold, ALIGN)
+    flat = [e for g in groups for e in g]
+    assert sorted(e.key for e in flat) == sorted(e.key for e in plan.extents)
+    for g in groups:
+        for a, b in zip(g, g[1:]):
+            assert b.path == a.path
+            pad = -a.nbytes % ALIGN
+            assert b.offset == a.offset + a.nbytes + pad
+
+
+def test_single_file_requires_totals():
+    with pytest.raises(ValueError):
+        plan_layout(_objects([10]), Strategy.SINGLE_FILE, rank=0)

@@ -1,0 +1,71 @@
+"""Buffer pool: alignment, size classes, reuse accounting, disabled mode."""
+
+import mmap
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffers import AlignedBuffer, BufferPool, PAGE, align_up
+
+
+def test_alignment():
+    for n in (1, 100, PAGE, PAGE + 1, 10 * PAGE + 7):
+        b = AlignedBuffer(n)
+        assert b.address % PAGE == 0
+        assert b.nbytes % PAGE == 0 and b.nbytes >= n
+        b.destroy()
+
+
+def test_size_class_power_of_two():
+    assert BufferPool.size_class(1) == PAGE
+    assert BufferPool.size_class(PAGE) == PAGE
+    assert BufferPool.size_class(PAGE + 1) == 2 * PAGE
+    assert BufferPool.size_class(3 * PAGE) == 4 * PAGE
+
+
+def test_reuse():
+    pool = BufferPool()
+    a = pool.get(1000)
+    a.release()
+    b = pool.get(2000)  # same class (1 page vs 1 page? 2000 <= PAGE=4096)
+    assert pool.stats.reuses == 1 and pool.stats.allocations == 1
+    b.release()
+    pool.drain()
+
+
+def test_disabled_pool_never_reuses():
+    pool = BufferPool(disabled=True)
+    for _ in range(5):
+        buf = pool.get(PAGE)
+        buf.release()
+    assert pool.stats.reuses == 0
+    assert pool.stats.allocations == 5
+
+
+def test_write_view_roundtrip():
+    pool = BufferPool()
+    b = pool.get(8192)
+    b.write_bytes(b"x" * 100, offset=50)
+    assert bytes(b.view(50, 100)) == b"x" * 100
+    b.release()
+    pool.drain()
+
+
+@settings(max_examples=30, deadline=None)
+@given(sizes=st.lists(st.integers(1, 1 << 20), min_size=1, max_size=24))
+def test_pool_invariants(sizes):
+    """Property: get/release of arbitrary size sequences keeps the books."""
+    pool = BufferPool()
+    held = []
+    for i, n in enumerate(sizes):
+        buf = pool.get(n)
+        assert buf.nbytes >= n and buf.address % PAGE == 0
+        held.append(buf)
+        if i % 2:
+            held.pop(0).release()
+    s = pool.stats
+    assert s.allocations + s.reuses == len(sizes)
+    assert s.released == len(sizes) - len(held)
+    for b in held:
+        b.release()
+    assert pool.free_buffers() <= len(sizes)
+    pool.drain()

@@ -1,0 +1,126 @@
+"""CheckpointManager: roundtrips, async, crash consistency, corruption, GC,
+quantized moments."""
+
+import glob
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CheckpointManager, EngineConfig
+from repro.core.manifest import Manifest
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(4096, dtype=jnp.float32).reshape(64, 64),
+                   "b": jnp.full((64,), 0.5, jnp.bfloat16)},
+        "opt": {"mu": jnp.zeros((64, 64)), "count": jnp.zeros((), jnp.int32)},
+        "step": 42,
+        "rng": jax.random.key(7),
+        "note": "lean-data",
+    }
+
+
+@pytest.mark.parametrize("engine", ["aggregated", "datastates", "snapshot",
+                                    "torchsave"])
+def test_roundtrip(engine, tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, engine=engine) as mgr:
+        mgr.save(10, state)
+        r = mgr.restore(state_template=state)
+    assert r["step"] == 42 and r["note"] == "lean-data"
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert r["params"]["b"].dtype == jnp.bfloat16
+    assert (jax.random.key_data(r["rng"]).tolist()
+            == jax.random.key_data(state["rng"]).tolist())
+
+
+def test_async_overlap(tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, async_save=True) as mgr:
+        m = mgr.save(1, state)
+        assert m.blocking_seconds < m.end_to_end_seconds or \
+            m.end_to_end_seconds == 0.0  # e2e filled after flush
+        mgr.wait()
+        assert mgr.latest_step() == 1
+        r = mgr.restore(state_template=state)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_versioning_and_gc(tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, keep=2) as mgr:
+        for s in (10, 20, 30, 40):
+            mgr.save(s, state)
+        assert mgr.all_steps() == [30, 40]
+        r = mgr.restore(state_template=state, step=30)
+        assert r["step"] == 42
+
+
+def test_crash_leaves_no_valid_partial(tmp_ckpt_dir):
+    """A .tmp dir (simulated crash) must be invisible and GC'd."""
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir) as mgr:
+        mgr.save(1, state)
+    # simulate a crashed save: a stale tmp dir with data but no manifest
+    crash = os.path.join(tmp_ckpt_dir, "step_00000002.tmp-dead")
+    os.makedirs(os.path.join(crash, "data"))
+    with open(os.path.join(crash, "data", "junk.bin"), "wb") as f:
+        f.write(b"x" * 100)
+    with CheckpointManager(tmp_ckpt_dir) as mgr2:
+        assert mgr2.all_steps() == [1]          # tmp not listed
+        assert not glob.glob(os.path.join(tmp_ckpt_dir, "*.tmp-*"))  # GC'd
+
+
+def test_corruption_detected(tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, verify_crc=True) as mgr:
+        mgr.save(1, state)
+        # flip bytes in the data file
+        man = Manifest.load(os.path.join(tmp_ckpt_dir, "step_00000001"))
+        sh = man.tensors["params/w"].shards[0]
+        path = os.path.join(tmp_ckpt_dir, "step_00000001", sh.path)
+        with open(path, "r+b") as f:
+            f.seek(sh.offset + 10)
+            f.write(b"\xff\xfe\xfd\xfc")
+        with pytest.raises((IOError, OSError)):
+            mgr.restore(state_template=state)
+
+
+def test_quantized_moments(tmp_ckpt_dir):
+    state = {"opt": {"mu": jax.random.normal(jax.random.key(0), (256, 512))},
+             "params": {"w": jnp.ones((128,), jnp.float32)}}
+    with CheckpointManager(tmp_ckpt_dir,
+                           quantize_prefixes=("opt/mu",)) as mgr:
+        mgr.save(1, state)
+        man = Manifest.load(os.path.join(tmp_ckpt_dir, "step_00000001"))
+        assert "opt/mu" in man.extra["quantized"]
+        stored = sum(s.nbytes for s in man.tensors["opt/mu"].shards)
+        assert stored < 256 * 512 * 4 / 2.5      # ~4x smaller than fp32
+        r = mgr.restore(state_template=state)
+    a, b = np.asarray(r["opt"]["mu"]), np.asarray(state["opt"]["mu"])
+    assert np.max(np.abs(a - b)) / np.max(np.abs(b)) < 0.01
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_restore_without_template(tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir) as mgr:
+        mgr.save(5, state)
+        r = mgr.restore()
+    assert isinstance(r["params"]["w"], np.ndarray)
+    np.testing.assert_array_equal(r["params"]["w"],
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_missing_checkpoint_raises(tmp_ckpt_dir):
+    with CheckpointManager(tmp_ckpt_dir) as mgr:
+        with pytest.raises(FileNotFoundError):
+            mgr.restore()

@@ -1,0 +1,88 @@
+"""I/O engine backends: roundtrips, queue-depth bounds, stats, O_DIRECT."""
+
+import os
+
+import pytest
+
+from repro.core.buffers import BufferPool
+from repro.core.io_engine import (IORequest, OP_READ, OP_WRITE, PosixEngine,
+                                  ThreadPoolEngine, UringEngine, make_engine,
+                                  open_for)
+from repro.core.uring import probe_io_uring
+
+BACKENDS = ["threadpool", "posix"] + (["uring"] if probe_io_uring() else [])
+
+
+@pytest.fixture
+def pool():
+    p = BufferPool()
+    yield p
+    p.drain()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("direct", [False, True])
+def test_roundtrip(backend, direct, tmp_path, pool, rng):
+    data = rng.integers(0, 256, size=(1 << 20,), dtype="uint8").tobytes()
+    path = str(tmp_path / "f.bin")
+    wb = pool.get(len(data))
+    wb.write_bytes(data)
+    fd = open_for(path, "w", direct=direct)
+    with make_engine(backend) as eng:
+        CH = 1 << 17
+        reqs = [IORequest(OP_WRITE, fd, off, wb, off, CH, user_data=i)
+                for i, off in enumerate(range(0, len(data), CH))]
+        comps = eng.run(reqs, queue_depth=8)
+        assert len(comps) == len(reqs)
+        eng.fsync(fd)
+    os.close(fd)
+    rb = pool.get(len(data))
+    fd = open_for(path, "r", direct=direct)
+    with make_engine(backend) as eng:
+        reqs = [IORequest(OP_READ, fd, off, rb, off, CH, user_data=i)
+                for i, off in enumerate(range(0, len(data), CH))]
+        eng.run(reqs, queue_depth=8)
+    os.close(fd)
+    assert bytes(rb.view(0, len(data))) == data
+    wb.release()
+    rb.release()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_queue_depth_respected(backend, tmp_path, pool):
+    fd = open_for(str(tmp_path / "q.bin"), "w")
+    buf = pool.get(4096 * 64)
+    with make_engine(backend) as eng:
+        reqs = [IORequest(OP_WRITE, fd, i * 4096, buf, i * 4096, 4096,
+                          user_data=i) for i in range(64)]
+        comps = eng.run(reqs, queue_depth=4)
+        assert len(comps) == 64
+        if backend != "posix":
+            assert eng.stats.max_inflight <= 8  # qd + one refill batch
+    os.close(fd)
+    buf.release()
+
+
+def test_stats_accounting(tmp_path, pool):
+    fd = open_for(str(tmp_path / "s.bin"), "w")
+    buf = pool.get(1 << 16)
+    with make_engine("posix") as eng:
+        eng.run([IORequest(OP_WRITE, fd, 0, buf, 0, 1 << 16, user_data=1)])
+        assert eng.stats.bytes_written == 1 << 16
+        assert eng.stats.ops == 1
+    os.close(fd)
+    buf.release()
+
+
+def test_auto_prefers_uring():
+    eng = make_engine("auto")
+    want = "uring" if probe_io_uring() else "threadpool"
+    assert eng.name == want
+    eng.close()
+
+
+def test_open_for_creates_dirs(tmp_path):
+    p = str(tmp_path / "a" / "b" / "c.bin")
+    fd = open_for(p, "w")
+    os.close(fd)
+    assert os.path.exists(p)

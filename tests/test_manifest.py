@@ -1,0 +1,69 @@
+"""Manifest: serialization roundtrip, merge, validity semantics."""
+
+import os
+
+import pytest
+
+from repro.core.manifest import (BlobRecord, Manifest, ShardEntry,
+                                 TensorRecord, crc32_of)
+
+
+def _manifest():
+    m = Manifest(step=7, num_ranks=2, strategy="single_file")
+    m.add_shard("w", "float32", (8, 8),
+                ShardEntry(((0, 4), (0, 8)), "data/c.bin", 0, 128, 123))
+    m.add_shard("w", "float32", (8, 8),
+                ShardEntry(((4, 8), (0, 8)), "data/c.bin", 4096, 128, 456))
+    m.blobs["__lean__"] = BlobRecord("__lean__", "data/c.bin", 8192, 10)
+    m.extra["engine"] = {"name": "aggregated"}
+    return m
+
+
+def test_json_roundtrip():
+    m = _manifest()
+    m2 = Manifest.loads(m.dumps())
+    assert m2.step == 7 and m2.num_ranks == 2
+    assert m2.tensors["w"].global_shape == (8, 8)
+    assert m2.tensors["w"].shards[1].index == ((4, 8), (0, 8))
+    assert m2.blobs["__lean__"].offset == 8192
+    assert m2.extra["engine"]["name"] == "aggregated"
+    assert m2.total_bytes == 128 * 2 + 10
+
+
+def test_save_load_atomic(tmp_path):
+    d = str(tmp_path)
+    m = _manifest()
+    assert not Manifest.exists(d)
+    m.save(d)
+    assert Manifest.exists(d)
+    m2 = Manifest.load(d)
+    assert m2.dumps() == m.dumps()
+    assert not os.path.exists(os.path.join(d, "manifest.json.tmp"))
+
+
+def test_merge():
+    a = _manifest()
+    b = Manifest(step=7, num_ranks=2, strategy="single_file")
+    b.add_shard("v", "bfloat16", (4,),
+                ShardEntry(((0, 4),), "data/c.bin", 9000, 8))
+    a.merge(b)
+    assert set(a.tensors) == {"w", "v"}
+
+
+def test_inconsistent_record_rejected():
+    m = _manifest()
+    with pytest.raises(ValueError):
+        m.add_shard("w", "int8", (8, 8),
+                    ShardEntry(((0, 8), (0, 8)), "x", 0, 64))
+
+
+def test_future_format_rejected():
+    m = _manifest()
+    m.format_version = 99
+    with pytest.raises(ValueError):
+        Manifest.loads(m.dumps())
+
+
+def test_crc():
+    assert crc32_of(b"hello") == crc32_of(bytearray(b"hello"))
+    assert crc32_of(b"hello") != crc32_of(b"hellp")

@@ -1,0 +1,76 @@
+"""Partition rules: divisibility guards, FSDP/ZeRO specs, spec shapes.
+
+Runs in a subprocess with 16 host devices (a 4x4 mesh) so the main pytest
+process keeps its single-device view.
+"""
+
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.sharding.partition import Partitioner
+from repro.train.steps import init_train_state
+
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+# qwen2.5: kv heads (2) cannot shard over model=4 -> wk replicated on dim1?
+cfg = get_config("qwen2.5-3b").scaled_down(layers=2, width_div=8, vocab=512)
+part = Partitioner(cfg, mesh)
+shape = jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg))
+sh = part.param_shardings(shape["params"])
+
+wq = sh["blocks"]["b0_attn"]["wq"].spec
+assert wq == P(None, None, "model"), wq
+embed = sh["embed"].spec
+assert embed in (P("model", None), P(None, "model")), embed
+
+# divisibility guard: kv dim for scaled config
+kvd = cfg.kv_dim
+wk = sh["blocks"]["b0_attn"]["wk"].spec
+if kvd % 4 == 0:
+    assert wk == P(None, None, "model"), wk
+else:
+    assert wk == P(None, None, None), wk
+
+# MoE expert parallelism
+mcfg = get_config("olmoe-1b-7b").scaled_down(layers=2, width_div=8, vocab=512)
+mpart = Partitioner(mcfg, mesh)
+mshape = jax.eval_shape(lambda: init_train_state(jax.random.key(0), mcfg))
+msh = mpart.param_shardings(mshape["params"])
+wg = msh["blocks"]["b0_attn"]["moe"]["wg"].spec
+assert wg[1] == "model", wg          # experts sharded (EP)
+router = msh["blocks"]["b0_attn"]["moe"]["router"].spec
+assert "model" not in router, router # router replicated
+
+# ZeRO-1 moments pick up the data axis
+opt_sh = mpart.opt_shardings(mshape["params"])
+mu_wq = opt_sh["mu"]["blocks"]["b0_attn"]["wq"].spec
+assert "data" in mu_wq, mu_wq
+
+# FSDP: params pick up data axis but never on the stacked dim 0
+fpart = Partitioner(cfg, mesh, fsdp=True)
+fsh = fpart.param_shardings(shape["params"])
+fwq = fsh["blocks"]["b0_attn"]["wq"].spec
+assert fwq[0] is None and "data" in fwq, fwq
+
+# norms replicated
+assert "model" not in sh["final_norm"]["scale"].spec
+
+print("SHARDING-OK")
+"""
+
+
+def test_partition_rules():
+    env = {**os.environ, "PYTHONPATH": "src"}
+    p = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=300,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SHARDING-OK" in p.stdout, p.stdout + p.stderr[-3000:]

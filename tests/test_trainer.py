@@ -1,0 +1,60 @@
+"""Trainer: resume determinism (the gold fault-tolerance property)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _make(tmp, steps, ckpt_every, engine="aggregated", seed=0):
+    cfg = get_config("qwen2.5-3b").scaled_down(layers=2, width_div=16,
+                                               vocab=256)
+    tcfg = TrainerConfig(steps=steps, ckpt_every=ckpt_every,
+                         ckpt_dir=tmp, ckpt_engine=engine,
+                         async_ckpt=False, log_every=0, seed=seed)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4,
+                      seed=seed)
+    return Trainer(cfg, tcfg, data_cfg=data)
+
+
+def test_resume_is_bit_exact(tmp_path):
+    """train(8) straight == train(4) + kill + resume train(8)."""
+    t_straight = _make(str(tmp_path / "a"), steps=8, ckpt_every=0)
+    out_a = t_straight.run()
+    t_straight.close()
+
+    t1 = _make(str(tmp_path / "b"), steps=4, ckpt_every=4)
+    t1.run()
+    t1.close()
+    t2 = _make(str(tmp_path / "b"), steps=8, ckpt_every=4)
+    out_b = t2.run()
+    t2.close()
+
+    pa = jax.tree.leaves(out_a["state"]["params"])
+    pb = jax.tree.leaves(out_b["state"]["params"])
+    for a, b in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(out_b["state"]["step"]) == 8
+
+
+def test_loss_decreases(tmp_path):
+    t = _make(str(tmp_path / "c"), steps=40, ckpt_every=0)
+    t.tcfg.log_every = 5
+    out = t.run()
+    t.close()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("engine", ["aggregated", "datastates"])
+def test_resume_across_engines(tmp_path, engine):
+    t1 = _make(str(tmp_path / engine), steps=3, ckpt_every=3, engine=engine)
+    t1.run()
+    t1.close()
+    t2 = _make(str(tmp_path / engine), steps=5, ckpt_every=0, engine=engine)
+    out = t2.run()
+    t2.close()
+    assert int(out["state"]["step"]) == 5

@@ -1,0 +1,106 @@
+"""io_uring binding: rings, opcodes, registered buffers, O_DIRECT."""
+
+import ctypes
+import mmap
+import os
+
+import pytest
+
+from repro.core.uring import IoUring, probe_io_uring
+
+pytestmark = pytest.mark.skipif(not probe_io_uring(),
+                                reason="io_uring unavailable")
+
+
+def _buf(nbytes, fill=None):
+    mm = mmap.mmap(-1, nbytes)
+    if fill:
+        mm.write(fill[:nbytes])
+        mm.seek(0)
+    addr = ctypes.addressof(ctypes.c_char.from_buffer(mm))
+    return mm, addr
+
+
+def test_nop_roundtrip():
+    with IoUring(entries=8) as ring:
+        ring.prep_nop(user_data=42)
+        assert ring.submit() == 1
+        cqes = ring.wait_cqes(1)
+        assert cqes[0].user_data == 42 and cqes[0].res == 0
+
+
+def test_write_read_fsync(tmp_path):
+    path = str(tmp_path / "f.bin")
+    data = os.urandom(1 << 20)
+    wmm, waddr = _buf(1 << 20, data)
+    fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o644)
+    with IoUring(entries=32) as ring:
+        for i in range(4):
+            off = i * (1 << 18)
+            ring.prep_write(fd, waddr + off, 1 << 18, off, user_data=i)
+        ring.submit()
+        cqes = ring.wait_cqes(4)
+        assert sorted(c.user_data for c in cqes) == [0, 1, 2, 3]
+        assert all(c.res == 1 << 18 for c in cqes)
+        ring.prep_fsync(fd, user_data=9)
+        ring.submit()
+        assert ring.wait_cqes(1)[0].res == 0
+    rmm, raddr = _buf(1 << 20)
+    with IoUring(entries=8) as ring:
+        ring.prep_read(fd, raddr, 1 << 20, 0, user_data=7)
+        ring.submit()
+        assert ring.wait_cqes(1)[0].res == 1 << 20
+    rmm.seek(0)
+    assert rmm.read(1 << 20) == data
+    os.close(fd)
+
+
+def test_fixed_buffers_odirect(tmp_path):
+    path = str(tmp_path / "d.bin")
+    data = os.urandom(1 << 16)
+    wmm, waddr = _buf(1 << 16, data)
+    rmm, raddr = _buf(1 << 16)
+
+    class B:
+        def __init__(self, mm, addr):
+            self.address, self.nbytes = addr, len(mm)
+
+    try:
+        fd = os.open(path, os.O_CREAT | os.O_RDWR | os.O_DIRECT, 0o644)
+    except OSError:
+        pytest.skip("O_DIRECT unsupported")
+    with IoUring(entries=8) as ring:
+        ring.register_buffers([B(wmm, waddr), B(rmm, raddr)])
+        ring.prep_write_fixed(fd, waddr, 1 << 16, 0, user_data=1, buf_index=0)
+        ring.submit()
+        assert ring.wait_cqes(1)[0].res == 1 << 16
+        ring.prep_read_fixed(fd, raddr, 1 << 16, 0, user_data=2, buf_index=1)
+        ring.submit()
+        assert ring.wait_cqes(1)[0].res == 1 << 16
+    rmm.seek(0)
+    assert rmm.read(1 << 16) == data
+    os.close(fd)
+
+
+def test_error_cqe(tmp_path):
+    """Read from an fd opened write-only must surface -EBADF/-EACCES."""
+    path = str(tmp_path / "e.bin")
+    fd = os.open(path, os.O_CREAT | os.O_WRONLY, 0o644)
+    mm, addr = _buf(4096)
+    with IoUring(entries=8) as ring:
+        ring.prep_read(fd, addr, 4096, 0, user_data=1)
+        ring.submit()
+        cqe = ring.wait_cqes(1)[0]
+        assert cqe.res < 0
+    os.close(fd)
+
+
+def test_queue_capacity():
+    with IoUring(entries=8) as ring:
+        assert ring.sq_space() == 8
+        for i in range(8):
+            ring.prep_nop(user_data=i)
+        assert ring.sq_space() == 0
+        ring.submit()
+        ring.wait_cqes(8)
+        assert ring.sq_space() == 8
