@@ -1,0 +1,146 @@
+"""Tiered transfer engine: level-0 → level-1 flush and level-1 → level-0
+restore prefetch through the io_engine stack vs the buffered shutil baseline
+(DESIGN.md §8).
+
+Writes the usual results/bench_tiered.json detail AND a repo-root
+``BENCH_tiered.json`` summary so the flush/prefetch trajectory is tracked
+across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import numpy as np
+
+from benchmarks.common import Report, fresh_dir
+from repro.core import CheckpointManager, MultiLevelCheckpointer
+from repro.core.multilevel import _default_copy
+from repro.core.uring import probe_io_uring
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_tiered.json")
+
+
+def _state(total_bytes: int, rng) -> dict:
+    """LLM-ish composition: one dominant tensor + medium shards + small."""
+    big = int(total_bytes * 0.75)
+    med = int(total_bytes * 0.2) // 8
+    out = {"params/embed": rng.integers(0, 255, size=(big,), dtype=np.uint8)}
+    for i in range(8):
+        out[f"params/layer{i}"] = rng.integers(0, 255, size=(med,),
+                                               dtype=np.uint8)
+    for i in range(24):
+        out[f"meta/small{i}"] = rng.integers(0, 255, size=(3000 + 171 * i,),
+                                             dtype=np.uint8)
+    return out
+
+
+def _seed_local(local: str, state) -> int:
+    with CheckpointManager(local, async_save=False) as mgr:
+        mgr.save(1, state, rank=0, num_ranks=1)
+    step_dir = os.path.join(local, "step_00000001")
+    return sum(os.path.getsize(os.path.join(root, n))
+               for root, _d, names in os.walk(step_dir) for n in names)
+
+
+def _bench_flush(local: str, remote: str, mode: str, reps: int = 2,
+                 **ml_kw) -> dict:
+    ml = MultiLevelCheckpointer(local, remote, **ml_kw)
+    best = None
+    try:
+        for _ in range(reps):
+            shutil.rmtree(remote, ignore_errors=True)
+            os.makedirs(remote)
+            os.sync()   # don't time the previous run's writeback
+            t0 = time.perf_counter()
+            s = ml.flush_to_remote(1)
+            wall = time.perf_counter() - t0
+            row = {"op": "flush", "mode": mode, "bytes": s.bytes,
+                   "wall_s": wall, "write_gbps": s.bytes / wall / 1e9,
+                   "files": s.files, "extents": s.extents,
+                   "hedged": s.hedged, "backend": s.backend or "shutil",
+                   "tier0_read_gbps": s.read_gbps,
+                   "tier1_write_gbps": s.write_gbps}
+            if best is None or row["write_gbps"] > best["write_gbps"]:
+                best = row
+        return best
+    finally:
+        ml.close()
+
+
+def _bench_prefetch(remote: str, scratch: str, mode: str, **ml_kw) -> dict:
+    """Node-loss restore: level-1 extents prefetched into a fresh level 0."""
+    shutil.rmtree(scratch, ignore_errors=True)
+    os.makedirs(scratch)
+    ml = MultiLevelCheckpointer(scratch, remote, **ml_kw)
+    try:
+        os.sync()
+        t0 = time.perf_counter()
+        ml.restore(step=1)
+        wall = time.perf_counter() - t0
+        nbytes = ml.local.last_restore_metrics.total_bytes
+        return {"op": "prefetch_restore", "mode": mode, "bytes": nbytes,
+                "wall_s": wall, "read_gbps": nbytes / wall / 1e9,
+                "promoted": os.path.exists(
+                    os.path.join(scratch, "step_00000001", "manifest.json"))}
+    finally:
+        ml.close()
+
+
+def run(full_scale: bool = False, quick: bool = False):
+    total = (2 << 30) if full_scale else (32 << 20) if quick else (256 << 20)
+    base = fresh_dir("tiered")
+    local = os.path.join(base, "level0")
+    rng = np.random.default_rng(7)
+    nbytes = _seed_local(local, _state(total, rng))
+    print(f"  seeded level-0 checkpoint: {nbytes >> 20} MB")
+
+    backends = ["threadpool", "posix"] + (["uring"] if probe_io_uring() else [])
+    rep = Report("bench_tiered")
+    flush_rows = []
+    row = _bench_flush(local, os.path.join(base, "r_shutil"), "shutil",
+                       copy_fn=_default_copy)
+    rep.add(**row)
+    flush_rows.append(row)
+    for b in backends:
+        row = _bench_flush(local, os.path.join(base, f"r_{b}"), f"tiered-{b}",
+                           transfer_backend=b)
+        rep.add(**row)
+        flush_rows.append(row)
+
+    # restore prefetch from the fastest tiered remote (node-loss recovery)
+    best_backend = max(flush_rows[1:],
+                       key=lambda r: r["write_gbps"])["backend"]
+    pf = _bench_prefetch(os.path.join(base, f"r_{best_backend}"),
+                         os.path.join(base, "level0_fresh"),
+                         f"tiered-{best_backend}")
+    rep.add(**pf)
+
+    out = rep.save()
+    shutil_gbps = flush_rows[0]["write_gbps"]
+    tiered = {r["mode"]: round(r["write_gbps"], 4) for r in flush_rows[1:]}
+    best_mode, best_gbps = max(tiered.items(), key=lambda kv: kv[1])
+    summary = {
+        "bytes": nbytes,
+        "flush_gbps": {"shutil": round(shutil_gbps, 4), **tiered},
+        "best": {"mode": best_mode, "gbps": best_gbps,
+                 "speedup_vs_shutil": round(best_gbps / shutil_gbps, 3)
+                 if shutil_gbps else None},
+        "prefetch_restore_gbps": round(pf["read_gbps"], 4),
+        "prefetch_promoted": pf["promoted"],
+    }
+    with open(SUMMARY_PATH, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"  summary -> {SUMMARY_PATH}: best {best_mode} "
+          f"{best_gbps:.2f} GB/s ({summary['best']['speedup_vs_shutil']}x "
+          f"vs shutil)")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

@@ -20,6 +20,7 @@ MODULES = [
     "bench_engines",         # Figs 11-12, 15-16
     "bench_restore_alloc",   # Figs 13-14
     "bench_llm_realistic",   # Figs 17-18
+    "bench_tiered",          # §8 tiered flush/prefetch vs shutil baseline
     "bench_train_overhead",  # Fig 3
     "io_hillclimb",          # §Perf I/O hypothesis loop
     "roofline",              # §Roofline from the dry-run

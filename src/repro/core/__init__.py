@@ -8,6 +8,7 @@ Layers (bottom-up):
   manifest     tensor→extent metadata with global shard indices
   engines      aggregated (ours) + datastates/snapshot/torchsave baselines
   checkpoint   CheckpointManager: async save, atomic commit, elastic restore
+  tiered       tier-to-tier transfer engine: extent-hedged flush + prefetch
   multilevel   local→PFS two-level flush with hedged straggler mitigation
 """
 
@@ -20,16 +21,18 @@ from .engines import (AggregatedEngine, CREngine, DataStatesEngine,
 from .io_engine import (IOEngine, IORequest, PosixEngine, ThreadPoolEngine,
                         UringEngine, make_engine, open_for)
 from .manifest import Manifest, ShardEntry, TensorRecord
-from .multilevel import MultiLevelCheckpointer
+from .multilevel import FlushStats, MultiLevelCheckpointer
+from .tiered import RestorePrefetcher, TieredTransferEngine, TransferStats
 from .uring import IoUring, probe_io_uring
 
 __all__ = [
     "AggregatedEngine", "AlignedBuffer", "BufferPool", "CREngine",
-    "CheckpointManager", "DataStatesEngine", "EngineConfig", "IOEngine",
-    "IORequest", "IoUring", "Manifest", "MultiLevelCheckpointer",
+    "CheckpointManager", "DataStatesEngine", "EngineConfig", "FlushStats",
+    "IOEngine", "IORequest", "IoUring", "Manifest", "MultiLevelCheckpointer",
     "ObjectSpec", "PAGE", "PosixEngine", "ReadReq", "RestoreMetrics",
-    "SaveItem", "SaveMetrics", "ShardEntry", "SnapshotEngine", "Strategy",
-    "TensorRecord", "ThreadPoolEngine", "TorchSaveEngine", "UringEngine",
+    "RestorePrefetcher", "SaveItem", "SaveMetrics", "ShardEntry",
+    "SnapshotEngine", "Strategy", "TensorRecord", "ThreadPoolEngine",
+    "TieredTransferEngine", "TorchSaveEngine", "TransferStats", "UringEngine",
     "coalesce", "make_cr_engine", "make_engine", "open_for", "plan_layout",
     "probe_io_uring",
 ]

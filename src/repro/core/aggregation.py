@@ -176,5 +176,27 @@ def coalesce(extents: list[Extent], threshold: int, align: int = PAGE
     return groups
 
 
+def chunk_extents(path: str, nbytes: int, chunk_bytes: int,
+                  align: int = PAGE, start: int = 0) -> list[Extent]:
+    """Split one file interval ``[start, start + nbytes)`` into transfer
+    extents of at most ``chunk_bytes``.
+
+    This is the planning half of a tier-to-tier copy (DESIGN.md §8): large
+    files become pipelined, individually-hedgeable extents at aligned
+    boundaries; the final extent carries any unaligned tail. Keys are
+    ``<path>@<offset>`` so extents are addressable in transfer stats."""
+    if chunk_bytes <= 0:
+        raise ValueError("chunk_bytes must be positive")
+    chunk = _align_up(chunk_bytes, align)
+    out: list[Extent] = []
+    off = start
+    end = start + nbytes
+    while off < end:
+        n = min(chunk, end - off)
+        out.append(Extent(f"{path}@{off}", path, off, n))
+        off += n
+    return out
+
+
 def _sanitize(key: str) -> str:
     return "".join(c if c.isalnum() or c in "._-" else "_" for c in key)[:180]

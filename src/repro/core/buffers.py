@@ -21,6 +21,17 @@ def align_up(n: int, quantum: int = PAGE) -> int:
     return (n + quantum - 1) // quantum * quantum
 
 
+def aligned_span(offset: int, nbytes: int, quantum: int = PAGE) -> tuple[int, int]:
+    """Expand a logical byte range to alignment boundaries.
+
+    Returns ``(start, span)`` with ``start % quantum == 0`` and
+    ``span % quantum == 0`` covering ``[offset, offset + nbytes)`` — the shape
+    an O_DIRECT read/write of that range must take (tiered prefetch pulls
+    manifest extents as aligned spans; see DESIGN.md §8)."""
+    start = offset - offset % quantum
+    return start, align_up(offset + nbytes - start, quantum)
+
+
 class AlignedBuffer:
     """A page-aligned host buffer backed by anonymous mmap."""
 

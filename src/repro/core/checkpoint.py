@@ -113,6 +113,9 @@ class CheckpointManager:
         self._flush_error: BaseException | None = None
         self.last_save_metrics: SaveMetrics | None = None
         self.last_restore_metrics: RestoreMetrics | None = None
+        # Optional tiered.RestorePrefetcher: when set, restore of a step not
+        # committed here is staged from the remote tier extent-by-extent.
+        self.prefetcher = None
         self._gc_tmp()
 
     # ---------------------------------------------------------------- steps
@@ -264,6 +267,23 @@ class CheckpointManager:
             if step is None:
                 raise FileNotFoundError(f"no checkpoints in {self.directory}")
         ckpt = os.path.join(self.directory, step_dir_name(step))
+        prefetch = None
+        if self.prefetcher is not None and not Manifest.exists(ckpt):
+            # level-1 → level-0 prefetch: stage manifest + lean extents now,
+            # tensor extents once the read plan is known (DESIGN.md §8.3)
+            staged = self.prefetcher.begin(step, self.directory)
+            if staged is not None:
+                ckpt, prefetch = staged, self.prefetcher
+        try:
+            return self._restore_from(ckpt, step, state_template, shardings,
+                                      prefetch, t_start)
+        except BaseException:
+            if prefetch is not None:
+                prefetch.discard(ckpt)
+            raise
+
+    def _restore_from(self, ckpt: str, step: int, state_template, shardings,
+                      prefetch, t_start: float):
         manifest = Manifest.load(ckpt)
         metrics = RestoreMetrics(step=step)
 
@@ -298,6 +318,8 @@ class CheckpointManager:
                         (key, sh.path, sh.offset),
                         ReadReq(f"{key}@{sh.path}@{sh.offset}", sh.path,
                                 sh.offset, sh.nbytes, obj=key))
+        if prefetch is not None:   # pull exactly the planned extents
+            prefetch.fetch_extents(ckpt, list(extent_reqs.values()))
         raw = self.engine.read(ckpt, list(extent_reqs.values()))
         metrics.read_seconds = time.perf_counter() - t0
         extent_bytes = {eo: raw[req.key] for eo, req in extent_reqs.items()}
@@ -319,6 +341,11 @@ class CheckpointManager:
 
         metrics.total_bytes = sum(
             s.nbytes for r in manifest.tensors.values() for s in r.shards)
+        if prefetch is not None:
+            # full-coverage prefetch commits the step at this tier; a
+            # partial (resharded) one stays staged and is discarded
+            prefetch.finish(ckpt, os.path.join(self.directory,
+                                               step_dir_name(step)))
         metrics.end_to_end_seconds = time.perf_counter() - t_start
         self.last_restore_metrics = metrics
         state = reinsert_tensors(lean_tree, out_tensors)
@@ -421,6 +448,8 @@ class CheckpointManager:
 
     def close(self) -> None:
         self.wait()
+        if self.prefetcher is not None:
+            self.prefetcher.close()
         self.engine.close()
 
     def __enter__(self):

@@ -17,7 +17,8 @@ import numpy as np
 
 from ..aggregation import Extent, ObjectSpec, Strategy, WritePlan, plan_layout, rank_padded_total
 from ..buffers import AlignedBuffer, BufferPool, PAGE, align_up
-from ..io_engine import IOEngine, IORequest, OP_READ, OP_WRITE, make_engine, open_for
+from ..io_engine import (IOEngine, IORequest, OP_READ, OP_WRITE, make_engine,
+                         open_for, resolve_backend)
 from ..manifest import BlobRecord, Manifest, ShardEntry, crc32_of
 
 
@@ -77,7 +78,7 @@ class IOStats:
 
 @dataclass
 class EngineConfig:
-    backend: str = "uring"            # uring | threadpool | posix
+    backend: str = "auto"             # auto | uring | threadpool | posix
     strategy: Strategy | str = Strategy.SINGLE_FILE
     direct: bool = True               # O_DIRECT
     queue_depth: int = 64
@@ -94,6 +95,7 @@ class EngineConfig:
 
     def normalized(self) -> "EngineConfig":
         self.strategy = Strategy.parse(self.strategy)
+        self.backend = resolve_backend(self.backend)
         return self
 
 

@@ -34,7 +34,7 @@ class DataStatesEngine(CREngine):
 
     def __init__(self, config: EngineConfig | None = None, pool=None):
         cfg = config or EngineConfig()
-        cfg.backend = "uring"
+        cfg.backend = "auto"           # uring when the kernel has it
         cfg.strategy = Strategy.FILE_PER_PROCESS
         cfg.direct = False             # buffered flush path
         cfg.pooled_buffers = False     # dynamic allocation (paper Fig 13)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 
@@ -53,6 +54,7 @@ class IORequest:
 class Completion:
     user_data: int
     nbytes: int
+    error: BaseException | None = None   # set iff engine.capture_errors
 
 
 @dataclass
@@ -71,6 +73,14 @@ class EngineStats:
         elif op == OP_READ:
             self.bytes_read += nbytes
 
+    def as_dict(self) -> dict:
+        """Flat dict for per-tier attribution in benchmark/flush reports."""
+        return {"submissions": self.submissions, "ops": self.ops,
+                "bytes_written": self.bytes_written,
+                "bytes_read": self.bytes_read,
+                "short_retries": self.short_retries,
+                "max_inflight": self.max_inflight}
+
 
 class IOEngine:
     """Base: synchronous convenience on top of submit/poll primitives."""
@@ -79,12 +89,20 @@ class IOEngine:
 
     def __init__(self):
         self.stats = EngineStats()
+        # True: a failed op is reported as Completion(error=...) instead of
+        # raising from poll() — required by callers that hedge requests and
+        # must tolerate one attempt failing while another succeeds
+        self.capture_errors = False
 
     # --- async primitives (overridden) ---
     def submit(self, reqs: list[IORequest]) -> None:
         raise NotImplementedError
 
-    def poll(self, min_n: int = 0) -> list[Completion]:
+    def poll(self, min_n: int = 0,
+             timeout_s: float | None = None) -> list[Completion]:
+        """Reap completions. ``min_n`` > 0 blocks for at least that many;
+        ``timeout_s`` bounds the block (hedging needs timed waits) — a timed
+        poll may return fewer than ``min_n`` completions, including none."""
         raise NotImplementedError
 
     @property
@@ -182,7 +200,8 @@ class UringEngine(IOEngine):
     def inflight(self) -> int:
         return len(self._pending)
 
-    def poll(self, min_n: int = 0) -> list[Completion]:
+    def poll(self, min_n: int = 0,
+             timeout_s: float | None = None) -> list[Completion]:
         out: list[Completion] = []
         if self._backlog:
             out, self._backlog = self._backlog, []
@@ -190,6 +209,20 @@ class UringEngine(IOEngine):
             if not min_n:
                 out.extend(self._reap(0))
                 return out
+        if min_n and timeout_s is not None:
+            # timed wait: spin on non-blocking reaps until deadline.
+            # min_n was already decremented by any backlog drained above,
+            # so count only newly reaped completions against it.
+            deadline = time.perf_counter() + timeout_s
+            got = 0
+            while got < min_n:
+                new = self._reap(0)
+                out.extend(new)
+                got += len(new)
+                if got >= min_n or time.perf_counter() >= deadline:
+                    break
+                time.sleep(0.0005)
+            return out
         out.extend(self._reap(min_n))
         return out
 
@@ -199,8 +232,13 @@ class UringEngine(IOEngine):
         for c in cqes:
             r = self._pending.pop(c.user_data)
             if c.res < 0:
-                raise OSError(-c.res, f"{r.op} failed: {os.strerror(-c.res)} "
-                                      f"(fd={r.fd} off={r.offset} n={r.nbytes})")
+                err = OSError(-c.res,
+                              f"{r.op} failed: {os.strerror(-c.res)} "
+                              f"(fd={r.fd} off={r.offset} n={r.nbytes})")
+                if self.capture_errors:
+                    out.append(Completion(r.user_data, 0, err))
+                    continue
+                raise err
             if r.op != OP_FSYNC and c.res < r.nbytes:
                 # short read/write: resubmit the remainder
                 self.stats.short_retries += 1
@@ -277,20 +315,27 @@ class ThreadPoolEngine(IOEngine):
     def inflight(self) -> int:
         return len(self._futs)
 
-    def poll(self, min_n: int = 0) -> list[Completion]:
+    def poll(self, min_n: int = 0,
+             timeout_s: float | None = None) -> list[Completion]:
         with self._lock:
             futs = list(self._futs)
         if not futs:
             return []
         done, _ = wait(futs, return_when="FIRST_COMPLETED" if min_n else "ALL_COMPLETED",
-                       timeout=None if min_n else 0)
+                       timeout=timeout_s if min_n else 0)
         out = []
         with self._lock:
             for f in done:
                 r = self._futs.pop(f, None)
                 if r is None:
                     continue
-                n = f.result()  # raises on error
+                try:
+                    n = f.result()
+                except BaseException as e:
+                    if self.capture_errors:
+                        out.append(Completion(r.user_data, 0, e))
+                        continue
+                    raise
                 self.stats.merge_op(r.op, n)
                 out.append(Completion(r.user_data, n))
         return out
@@ -310,8 +355,14 @@ class PosixEngine(IOEngine):
 
     def submit(self, reqs: list[IORequest]) -> None:
         for r in reqs:
-            n = ThreadPoolEngine._do(r)  # same loop, executed inline
             self.stats.submissions += 1
+            try:
+                n = ThreadPoolEngine._do(r)  # same loop, executed inline
+            except BaseException as e:
+                if self.capture_errors:
+                    self._done.append(Completion(r.user_data, 0, e))
+                    continue
+                raise
             self.stats.merge_op(r.op, n)
             self._done.append(Completion(r.user_data, n))
 
@@ -319,7 +370,8 @@ class PosixEngine(IOEngine):
     def inflight(self) -> int:
         return 0
 
-    def poll(self, min_n: int = 0) -> list[Completion]:
+    def poll(self, min_n: int = 0,
+             timeout_s: float | None = None) -> list[Completion]:
         out, self._done = self._done, []
         return out
 
@@ -331,11 +383,16 @@ _ENGINES = {
 }
 
 
-def make_engine(name: str = "auto", **kw) -> IOEngine:
-    """Engine factory. 'auto' prefers io_uring, falls back to threads."""
+def resolve_backend(name: str = "auto") -> str:
+    """'auto' prefers io_uring, falls back to threads (single policy point)."""
     if name == "auto":
-        name = "uring" if probe_io_uring() else "threadpool"
-    return _ENGINES[name](**kw)
+        return "uring" if probe_io_uring() else "threadpool"
+    return name
+
+
+def make_engine(name: str = "auto", **kw) -> IOEngine:
+    """Engine factory."""
+    return _ENGINES[resolve_backend(name)](**kw)
 
 
 def open_for(path: str, mode: str, direct: bool = False,

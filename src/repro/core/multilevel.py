@@ -8,9 +8,16 @@ storage before flushing to the PFS. We adopt the same split for the LLM case:
   level 1 — shared/parallel FS directory (slow, survives node loss)
 
 ``save`` returns as soon as level 0 committed; the level-1 flush runs in the
-background. Slow per-file copies (stragglers — e.g. a contended OST) are
-*hedged*: after a deadline, a duplicate transfer is issued and the first to
-finish wins — bounding the tail without failing the flush.
+background. The flush executes through the tiered transfer engine
+(DESIGN.md §8): extents stream through an io_engine backend (uring when the
+kernel has it), and slow extents (stragglers — e.g. a contended OST) are
+*hedged*: after a deadline a duplicate transfer is issued and the first to
+finish wins — bounding the tail without failing the flush. Passing a
+``copy_fn`` selects the legacy whole-file path with whole-file hedging.
+
+Restore prefers level 0; a step only at level 1 is restored through
+``RestorePrefetcher``, which pulls the planned extents into level 0 ahead of
+tensor materialization and commits the step locally when fully covered.
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from dataclasses import dataclass, field
 
 from .checkpoint import CheckpointManager, step_dir_name
 from .manifest import Manifest
+from .tiered import RestorePrefetcher, TieredTransferEngine
 
 
 @dataclass
@@ -33,6 +41,15 @@ class FlushStats:
     seconds: float = 0.0
     hedged: int = 0          # duplicate transfers issued
     hedge_wins: int = 0      # duplicates that beat the original
+    extents: int = 0         # extent-granular segments (tiered path)
+    backend: str = ""        # io_engine backend the flush executed on
+    read_gbps: float = 0.0   # source tier (level 0) bandwidth
+    write_gbps: float = 0.0  # destination tier (level 1) bandwidth
+    per_tier: dict = field(default_factory=dict)  # EngineStats per tier
+
+    @property
+    def gbps(self) -> float:
+        return self.bytes / self.seconds / 1e9 if self.seconds else 0.0
 
 
 def _default_copy(src: str, dst: str) -> None:
@@ -50,7 +67,13 @@ class MultiLevelCheckpointer:
     def __init__(self, local_dir: str, remote_dir: str, *,
                  engine: str = "aggregated", config=None,
                  hedge_after_s: float = 5.0, min_bw_bytes_s: float = 50e6,
-                 flush_workers: int = 4, copy_fn=_default_copy, **mgr_kw):
+                 flush_workers: int = 4, copy_fn=None,
+                 transfer_backend: str = "auto", direct: bool = False,
+                 chunk_bytes: int = 4 << 20, transfer=None, **mgr_kw):
+        """``copy_fn=None`` (default) flushes through the tiered transfer
+        engine; a callable selects the legacy per-file copy path with
+        whole-file hedging. ``transfer`` injects a preconfigured
+        TieredTransferEngine (tests, shared pools)."""
         self.local = CheckpointManager(local_dir, engine=engine,
                                        config=config, **mgr_kw)
         self.remote_dir = os.path.abspath(remote_dir)
@@ -58,6 +81,13 @@ class MultiLevelCheckpointer:
         self.hedge_after_s = hedge_after_s
         self.min_bw_bytes_s = min_bw_bytes_s
         self.copy_fn = copy_fn
+        self.transfer = transfer or TieredTransferEngine(
+            transfer_backend, chunk_bytes=chunk_bytes, direct=direct,
+            queue_depth=flush_workers * 4, hedge_after_s=hedge_after_s,
+            min_bw_bytes_s=min_bw_bytes_s)
+        # restore-side: steps only at level 1 are prefetched extent-wise
+        self.local.prefetcher = RestorePrefetcher(self.remote_dir,
+                                                  self.transfer)
         self._pool = ThreadPoolExecutor(max_workers=flush_workers,
                                         thread_name_prefix="flush")
         self._flush_thread: threading.Thread | None = None
@@ -100,14 +130,33 @@ class MultiLevelCheckpointer:
         # manifest last: its presence defines validity at level 1 too
         files.sort(key=lambda f: (f[1] == "manifest.json", f[1]))
 
-        for src, rel, size in files:
-            dst = os.path.join(dst_tmp, rel)
-            os.makedirs(os.path.dirname(dst), exist_ok=True)
-            self._copy_hedged(src, dst, size, stats)
-            stats.files += 1
-            stats.bytes += size
+        if self.copy_fn is not None:
+            # legacy path: one copy_fn call per file, whole-file hedging
+            for src, rel, size in files:
+                dst = os.path.join(dst_tmp, rel)
+                os.makedirs(os.path.dirname(dst), exist_ok=True)
+                self._copy_hedged(src, dst, size, stats)
+                stats.files += 1
+                stats.bytes += size
+        else:
+            # tiered path: extent streams through an io_engine backend
+            pairs = [(src, os.path.join(dst_tmp, rel))
+                     for src, rel, _size in files]
+            ts = self.transfer.transfer(pairs)
+            stats.files = ts.files
+            stats.bytes = ts.bytes
+            stats.extents = ts.extents
+            stats.hedged = ts.hedged
+            stats.hedge_wins = ts.hedge_wins
+            stats.backend = ts.backend
+            stats.per_tier = ts.per_tier()
         os.replace(dst_tmp, dst_fin)
         stats.seconds = time.perf_counter() - t0
+        if stats.seconds:
+            stats.read_gbps = (stats.per_tier.get("source", {})
+                               .get("bytes_read", 0) / stats.seconds / 1e9)
+            stats.write_gbps = (stats.per_tier.get("destination", {})
+                                .get("bytes_written", 0) / stats.seconds / 1e9)
         self.last_flush_stats = stats
         return stats
 
@@ -154,15 +203,12 @@ class MultiLevelCheckpointer:
             step = all_steps[-1]
         if step in local_steps:
             return self.local.restore(state_template, step=step, **kw)
-        # pull from remote into local, then restore
+        # level-1 only: the local manager's RestorePrefetcher stages the
+        # manifest, then pulls exactly the planned extents ahead of tensor
+        # materialization; full coverage commits the step at level 0
         src = os.path.join(self.remote_dir, step_dir_name(step))
-        dst = os.path.join(self.local.directory, step_dir_name(step))
         if not Manifest.exists(src):
             raise FileNotFoundError(f"step {step} not committed at level 1")
-        tmp = dst + ".tmp-pull"
-        shutil.rmtree(tmp, ignore_errors=True)
-        shutil.copytree(src, tmp)
-        os.replace(tmp, dst)
         return self.local.restore(state_template, step=step, **kw)
 
     def _remote_steps(self) -> list[int]:
@@ -185,6 +231,7 @@ class MultiLevelCheckpointer:
     def close(self) -> None:
         self.wait()
         self._pool.shutdown(wait=True)
+        self.transfer.close()
         self.local.close()
 
     def __enter__(self):

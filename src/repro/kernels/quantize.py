@@ -26,7 +26,10 @@ LANE_COLS = 512     # 4 × 128 lanes per row-group
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                   # (ROW_BLK, LANE_COLS)
     absmax = jnp.max(jnp.abs(x), axis=1)                 # (ROW_BLK,)
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    # multiply by the f32 reciprocal (not a / 127.0): XLA strength-reduces
+    # constant divides to reciprocal multiplies, so spelling it out keeps
+    # compiled and eager (oracle) paths bit-identical at round-half points
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / 127.0), 1.0)
     q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale.astype(jnp.float32)

@@ -10,7 +10,8 @@ def quantize_blocks_ref(x):
     """x: (R, C) -> (int8 (R, C), f32 scales (R,)); one group per row."""
     x = x.astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x), axis=1)
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    # reciprocal multiply, matching the kernel (see _quant_kernel)
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / 127.0), 1.0)
     q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 

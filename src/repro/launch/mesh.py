@@ -9,14 +9,17 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def axis_types_kw(n):
+    """``axis_types=(Auto,)*n`` kwargs where the jax version has AxisType
+    (≥ 0.6); empty on older jax, whose meshes are Auto by default."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -25,4 +28,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         raise ValueError(f"need {data * model} devices, have {n}")
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+                         **axis_types_kw(2))

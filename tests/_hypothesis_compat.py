@@ -1,0 +1,82 @@
+"""Stdlib fallback for the subset of `hypothesis` the test suite uses.
+
+The property tests guard their import with::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+so the tier-1 suite runs (with deterministic pseudo-random examples instead
+of shrinking search) on containers where hypothesis isn't installed.
+Supported: ``st.integers``, ``st.lists``, ``st.sampled_from``, ``st.tuples``,
+``@settings(max_examples=..., deadline=...)``, ``@given(**kwargs)``.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rnd):
+            n = rnd.randint(min_size, max_size)
+            return [elements.example(rnd) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rnd: rnd.choice(seq))
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rnd: tuple(s.example(rnd) for s in strats))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def apply(fn):
+        fn._max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(**strats):
+    def wrap(fn):
+        def runner(**kwargs):
+            # pytest fixtures (e.g. tmp_path_factory) arrive via kwargs;
+            # strategy kwargs are drawn per example.
+            n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+            rnd = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for _ in range(n):
+                drawn = {k: s.example(rnd) for k, s in strats.items()}
+                fn(**drawn, **kwargs)
+        # expose only the non-strategy params so pytest injects its fixtures
+        sig = inspect.signature(fn)
+        runner.__signature__ = inspect.Signature(
+            [p for name, p in sig.parameters.items() if name not in strats])
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        if hasattr(fn, "_max_examples"):
+            runner._max_examples = fn._max_examples
+        return runner
+    return wrap

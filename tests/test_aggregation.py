@@ -1,7 +1,10 @@
 """Aggregation planners: layout invariants under all three strategies."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container without hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.aggregation import (ObjectSpec, Strategy, coalesce,
                                     plan_layout, rank_padded_total,

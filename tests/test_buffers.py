@@ -2,7 +2,10 @@
 
 import mmap
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container without hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.buffers import AlignedBuffer, BufferPool, PAGE, align_up
 

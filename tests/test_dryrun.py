@@ -46,8 +46,8 @@ from repro.launch.specs import input_specs
 from repro.launch.dryrun import _jit_cell, collective_bytes
 from repro.models.config import ShapeConfig
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 4)
 cfg = get_config("qwen2.5-3b").scaled_down(layers=2, width_div=8, vocab=512)
 for shape in [ShapeConfig("t", 256, 8, "train"),
               ShapeConfig("p", 256, 8, "prefill"),

@@ -2,11 +2,17 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container without hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.engines import (ENGINES, EngineConfig, ReadReq, SaveItem,
                                 make_cr_engine)
 from repro.core.aggregation import Strategy
+from repro.core.uring import probe_io_uring
+
+BACKENDS = ["threadpool", "posix"] + (["uring"] if probe_io_uring() else [])
 
 
 def _items(rng, sizes):
@@ -55,7 +61,7 @@ def test_roundtrip_strategies(engine, strategy, tmp_path, rng):
 
 @pytest.mark.parametrize("engine", ["aggregated"])
 @pytest.mark.parametrize("direct", [True, False])
-@pytest.mark.parametrize("backend", ["uring", "threadpool", "posix"])
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_aggregated_backends(engine, direct, backend, tmp_path, rng):
     items = _items(rng, [1 << 19, 100, 5000, 65536])
     _roundtrip(engine, items, tmp_path, direct=direct, backend=backend)

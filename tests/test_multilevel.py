@@ -1,14 +1,20 @@
-"""Multi-level checkpointing: flush, node-loss recovery, hedged stragglers."""
+"""Multi-level checkpointing: flush, node-loss recovery, hedged stragglers,
+tiered transfers (extent hedging, restore prefetch, per-tier stats)."""
 
 import os
 import shutil
+import subprocess
+import sys
 import threading
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MultiLevelCheckpointer
+from repro.core import Manifest, MultiLevelCheckpointer
+from repro.core.aggregation import Extent
+from repro.core.io_engine import OP_WRITE, ThreadPoolEngine
+from repro.core.tiered import RestorePrefetcher, TieredTransferEngine
 
 
 def _state():
@@ -68,3 +74,213 @@ def test_hedged_straggler(tmp_path):
         r = ml.restore(state_template=_state())
         np.testing.assert_array_equal(np.asarray(r["w"]),
                                       np.asarray(_state()["w"]))
+
+
+# --------------------------------------------------------- tiered transfers
+class _StallFirstWrite(ThreadPoolEngine):
+    """Injects one slow write — an extent-level straggler."""
+
+    def __init__(self, stall_s: float):
+        super().__init__(workers=4)
+        self.stall_s = stall_s
+        self._lock = threading.Lock()
+        self._armed = True
+
+    def _do(self, r):
+        if r.op == OP_WRITE and r.nbytes >= 4096:
+            with self._lock:
+                fire, self._armed = self._armed, False
+            if fire:
+                time.sleep(self.stall_s)
+        return ThreadPoolEngine._do(r)
+
+
+def test_extent_hedging(tmp_path):
+    """A stalled extent write is hedged; the duplicate wins and the
+    destination bytes are exact."""
+    src = tmp_path / "src.bin"
+    dst = tmp_path / "dst.bin"
+    data = np.random.default_rng(0).integers(
+        0, 256, size=(3 << 20) + 123, dtype=np.uint8).tobytes()
+    src.write_bytes(data)
+
+    def factory(role):
+        return _StallFirstWrite(2.0) if role == "write" \
+            else ThreadPoolEngine(workers=4)
+
+    eng = TieredTransferEngine(engine_factory=factory, chunk_bytes=1 << 20,
+                               hedge_after_s=0.3, min_bw_bytes_s=1e15)
+    stats = eng.transfer([(str(src), str(dst))])
+    assert stats.hedged >= 1
+    assert stats.hedge_wins >= 1
+    assert stats.extents >= 3          # 1 MB chunking of a >3 MB file
+    assert dst.read_bytes() == data
+    eng.close()
+
+
+class _FailPrimaryAfterHedge(ThreadPoolEngine):
+    """Primary write blocks until its hedge arrives, then fails — the
+    transfer must tolerate the loser's error because the hedge wins."""
+
+    def __init__(self):
+        super().__init__(workers=4)
+        self.lk = threading.Lock()
+        self.seen = set()
+        self.hedge_arrived = threading.Event()
+
+    def _do(self, r):
+        if r.op == OP_WRITE and r.nbytes >= 4096:
+            with self.lk:
+                first = r.offset not in self.seen
+                self.seen.add(r.offset)
+            if first:
+                assert self.hedge_arrived.wait(timeout=10)
+                raise OSError(5, "injected EIO on the straggling primary")
+            self.hedge_arrived.set()
+        return ThreadPoolEngine._do(r)
+
+
+def test_failed_loser_tolerated(tmp_path):
+    src, dst = tmp_path / "s.bin", tmp_path / "d.bin"
+    data = np.random.default_rng(3).integers(
+        0, 256, size=1 << 20, dtype=np.uint8).tobytes()
+    src.write_bytes(data)
+    eng = TieredTransferEngine(
+        engine_factory=lambda role: _FailPrimaryAfterHedge()
+        if role == "write" else ThreadPoolEngine(workers=4),
+        chunk_bytes=1 << 20, hedge_after_s=0.2, min_bw_bytes_s=1e15)
+    stats = eng.transfer([(str(src), str(dst))])
+    assert stats.hedged == 1
+    assert dst.read_bytes() == data
+    eng.close()
+
+
+class _AlwaysFailWrite(ThreadPoolEngine):
+    def __init__(self):
+        super().__init__(workers=4)
+
+    def _do(self, r):
+        if r.op == OP_WRITE:
+            raise OSError(28, "injected ENOSPC")
+        return ThreadPoolEngine._do(r)
+
+
+def test_all_attempts_failed_raises(tmp_path):
+    """When every attempt for an extent fails, the transfer must fail."""
+    src = tmp_path / "s.bin"
+    src.write_bytes(b"z" * 8192)
+    eng = TieredTransferEngine(
+        engine_factory=lambda role: _AlwaysFailWrite()
+        if role == "write" else ThreadPoolEngine(workers=4))
+    import pytest
+    with pytest.raises(OSError):
+        eng.transfer([(str(src), str(tmp_path / "d.bin"))])
+    eng.close()
+
+
+def test_flush_stats_accounting(tmp_path):
+    """Tiered flush reports logical bytes, extents, and per-tier engine
+    stats that attribute bandwidth to each side of the transfer."""
+    local, remote = str(tmp_path / "l"), str(tmp_path / "r")
+    with MultiLevelCheckpointer(local, remote) as ml:
+        ml.save(12, _state())
+        ml.wait()
+        s = ml.last_flush_stats
+        src_dir = os.path.join(local, "step_00000012")
+        sizes = [os.path.getsize(os.path.join(root, n))
+                 for root, _d, names in os.walk(src_dir) for n in names]
+        assert s.files == len(sizes)
+        assert s.bytes == sum(sizes)
+        assert s.extents >= s.files
+        assert s.backend in ("uring", "threadpool", "posix")
+        assert s.per_tier["source"]["bytes_read"] == sum(sizes)
+        assert s.per_tier["destination"]["bytes_written"] == sum(sizes)
+        assert s.gbps > 0 and s.read_gbps > 0 and s.write_gbps > 0
+
+
+def test_prefetch_promotes_full_restore(tmp_path):
+    """A full prefetch restore commits the step back at level 0 with no
+    staging leftovers."""
+    local, remote = str(tmp_path / "l"), str(tmp_path / "r")
+    with MultiLevelCheckpointer(local, remote) as ml:
+        ml.save(9, _state())
+        ml.wait()
+        shutil.rmtree(local)
+        os.makedirs(local)
+        r = ml.restore(state_template=_state())
+        np.testing.assert_array_equal(np.asarray(r["w"]),
+                                      np.asarray(_state()["w"]))
+        assert os.path.exists(os.path.join(local, "step_00000009",
+                                           "manifest.json"))
+        assert not [n for n in os.listdir(local) if ".tmp" in n]
+        # second restore must be served from level 0 (no staging dir made)
+        r2 = ml.restore(state_template=_state())
+        np.testing.assert_array_equal(np.asarray(r2["w"]),
+                                      np.asarray(_state()["w"]))
+
+
+def test_partial_prefetch_stays_staged(tmp_path):
+    """Fetching a subset of extents stages correct bytes but must NOT
+    commit the step at level 0 (partial data is never restorable)."""
+    local, remote = str(tmp_path / "l"), str(tmp_path / "r")
+    with MultiLevelCheckpointer(local, remote) as ml:
+        ml.save(4, _state())
+        ml.wait()
+    scratch = str(tmp_path / "scratch")
+    os.makedirs(scratch)
+    pf = RestorePrefetcher(remote)
+    staged = pf.begin(4, scratch)
+    assert staged is not None and os.path.exists(
+        os.path.join(staged, "manifest.json"))
+    m = Manifest.load(os.path.join(remote, "step_00000004"))
+    rec = next(iter(m.tensors.values()))
+    sh = rec.shards[0]
+    n = min(4096, sh.nbytes)
+    pf.fetch_extents(staged, [Extent(rec.key, sh.path, sh.offset, n)])
+    with open(os.path.join(staged, sh.path), "rb") as f:
+        f.seek(sh.offset)
+        got = f.read(n)
+    with open(os.path.join(remote, "step_00000004", sh.path), "rb") as f:
+        f.seek(sh.offset)
+        assert got == f.read(n)
+    final = os.path.join(scratch, "step_00000004")
+    assert pf.finish(staged, final) is False
+    assert not os.path.exists(staged) and not os.path.exists(final)
+    pf.close()
+
+
+ELASTIC_ML = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, shutil, sys
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import MultiLevelCheckpointer
+devs = jax.devices()
+mesh_a = Mesh(np.array(devs).reshape(2, 4), ("data", "model"))
+mesh_b = Mesh(np.array(devs).reshape(4, 2), ("data", "model"))
+w = jnp.arange(64 * 128, dtype=jnp.float32).reshape(64, 128)
+state = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))}
+local, remote = sys.argv[1], sys.argv[2]
+with MultiLevelCheckpointer(local, remote) as ml:
+    ml.save(1, state)
+    ml.wait()
+    shutil.rmtree(local)           # node loss
+    os.makedirs(local)
+    tmpl = {"w": jax.ShapeDtypeStruct(w.shape, w.dtype,
+            sharding=NamedSharding(mesh_b, P("model", "data")))}
+    r = ml.restore(state_template=tmpl)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(w))
+print("ELASTIC-ML-OK")
+"""
+
+
+def test_prefetch_elastic_reshard_multidevice(tmp_path):
+    """Save on a 2x4 mesh, lose the node, restore on a 4x2 mesh — the
+    level-1 prefetch path must feed the resharded read plan exactly."""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    p = subprocess.run(
+        [sys.executable, "-c", ELASTIC_ML,
+         str(tmp_path / "l"), str(tmp_path / "r")],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=300)
+    assert "ELASTIC-ML-OK" in p.stdout, p.stderr[-2000:]

@@ -6,7 +6,10 @@ import sys
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container without hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.manifest import ShardEntry, TensorRecord
 from repro.core.resharding import (assemble, dedupe_shards, intersect,

@@ -18,8 +18,8 @@ from repro.configs import get_config
 from repro.sharding.partition import Partitioner
 from repro.train.steps import init_train_state
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(4, 4)
 
 # qwen2.5: kv heads (2) cannot shard over model=4 -> wk replicated on dim1?
 cfg = get_config("qwen2.5-3b").scaled_down(layers=2, width_div=8, vocab=512)
