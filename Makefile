@@ -1,0 +1,13 @@
+PY ?= python
+
+.PHONY: verify test bench-smoke
+
+# The ROADMAP tier-1 gate plus the save-path smoke benchmark: regressions in
+# either the test suite or pipelined blocking time fail loudly.
+verify: test bench-smoke
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_train_overhead --smoke

@@ -12,6 +12,7 @@ from __future__ import annotations
 import ctypes
 import mmap
 import threading
+import time
 from dataclasses import dataclass, field
 
 PAGE = mmap.PAGESIZE  # typically 4096; also the O_DIRECT alignment quantum
@@ -61,6 +62,12 @@ class AlignedBuffer:
             self.pool.put(self)
 
     def destroy(self) -> None:
+        pool, self.pool = self.pool, None
+        if pool is not None:
+            # destroyed without passing through put() (e.g. a janitor reaping
+            # a straggling transfer): settle the outstanding-byte books so
+            # acquire() budgets don't leak
+            pool._forget(self)
         try:
             self._mv.release()
             self.mm.close()
@@ -82,12 +89,46 @@ class PoolStats:
     released: int = 0
     bytes_allocated: int = 0
     high_water_bytes: int = 0
+    peak_outstanding_bytes: int = 0   # max bytes handed out and unreleased
     by_class: dict = field(default_factory=dict)
 
     @property
     def reuse_rate(self) -> float:
         total = self.allocations + self.reuses
         return self.reuses / total if total else 0.0
+
+
+class StageBudget:
+    """In-flight staged-byte accounting for streaming transfer loops.
+
+    The snapshot pipeline (engines.aggregated save stream) and the tiered
+    transfer engine both stage data through pooled buffers; this is the shared
+    backpressure primitive that caps how many staged bytes may be in flight at
+    once. ``limit=None`` disables the cap. Not thread-safe by design — each
+    user drives its own single-threaded submit/reap loop and consults the
+    budget only from that loop (cross-thread blocking waits go through
+    ``BufferPool.acquire`` instead).
+    """
+
+    __slots__ = ("limit", "in_flight", "peak")
+
+    def __init__(self, limit: int | None):
+        self.limit = limit
+        self.in_flight = 0
+        self.peak = 0
+
+    def admits(self, nbytes: int) -> bool:
+        """True if staging ``nbytes`` more fits the budget. Always grants
+        when nothing is in flight so one oversized request can't deadlock."""
+        return (self.limit is None or self.in_flight == 0
+                or self.in_flight + nbytes <= self.limit)
+
+    def add(self, nbytes: int) -> None:
+        self.in_flight += nbytes
+        self.peak = max(self.peak, self.in_flight)
+
+    def sub(self, nbytes: int) -> None:
+        self.in_flight -= nbytes
 
 
 class BufferPool:
@@ -99,12 +140,16 @@ class BufferPool:
     released buffers are destroyed.
     """
 
-    def __init__(self, disabled: bool = False, max_cached_bytes: int | None = None):
+    def __init__(self, disabled: bool = False, max_cached_bytes: int | None = None,
+                 max_outstanding_bytes: int | None = None):
         self._free: dict[int, list[AlignedBuffer]] = {}
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
         self.disabled = disabled
         self.max_cached_bytes = max_cached_bytes
+        self.max_outstanding_bytes = max_outstanding_bytes  # acquire() budget
         self._cached_bytes = 0
+        self._outstanding = 0     # bytes handed out and not yet released
         self.stats = PoolStats()
 
     @staticmethod
@@ -112,36 +157,78 @@ class BufferPool:
         nbytes = max(nbytes, PAGE)
         return 1 << (nbytes - 1).bit_length()
 
+    @property
+    def outstanding_bytes(self) -> int:
+        return self._outstanding
+
     def get(self, nbytes: int) -> AlignedBuffer:
-        cls = self.size_class(nbytes)
-        if not self.disabled:
-            with self._lock:
-                lst = self._free.get(cls)
-                if lst:
-                    buf = lst.pop()
-                    self._cached_bytes -= buf.nbytes
-                    self.stats.reuses += 1
-                    return buf
-        buf = AlignedBuffer(cls, pool=self, size_class=cls)
         with self._lock:
+            return self._get_locked(self.size_class(nbytes))
+
+    def acquire(self, nbytes: int, budget: int | None = None,
+                timeout: float | None = None) -> AlignedBuffer:
+        """Blocking bounded ``get``: waits until granting ``nbytes`` keeps the
+        pool's outstanding (handed-out, unreleased) bytes within ``budget``
+        (default: ``max_outstanding_bytes``). A request is always granted when
+        nothing is outstanding, so one oversized buffer can't deadlock.
+        Raises TimeoutError after ``timeout`` seconds."""
+        cls = self.size_class(nbytes)
+        limit = self.max_outstanding_bytes if budget is None else budget
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while (limit is not None and self._outstanding
+                   and self._outstanding + cls > limit):
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"buffer budget exhausted: {self._outstanding} B "
+                        f"outstanding, want {cls} B under a {limit} B budget")
+                self._cond.wait(0.5 if remaining is None else min(remaining, 0.5))
+            return self._get_locked(cls)
+
+    def _get_locked(self, cls: int) -> AlignedBuffer:
+        buf = None
+        if not self.disabled:
+            lst = self._free.get(cls)
+            if lst:
+                buf = lst.pop()
+                self._cached_bytes -= buf.nbytes
+                self.stats.reuses += 1
+        if buf is None:
+            buf = AlignedBuffer(cls, pool=self, size_class=cls)
             self.stats.allocations += 1
             self.stats.bytes_allocated += buf.nbytes
             self.stats.by_class[cls] = self.stats.by_class.get(cls, 0) + 1
             self.stats.high_water_bytes = max(
                 self.stats.high_water_bytes, self.stats.bytes_allocated)
+        self._outstanding += buf.nbytes
+        self.stats.peak_outstanding_bytes = max(
+            self.stats.peak_outstanding_bytes, self._outstanding)
         return buf
 
     def put(self, buf: AlignedBuffer) -> None:
-        with self._lock:
+        with self._cond:
             self.stats.released += 1
+            self._outstanding -= buf.nbytes
+            self._cond.notify_all()
             if self.disabled or (
                     self.max_cached_bytes is not None
                     and self._cached_bytes + buf.nbytes > self.max_cached_bytes):
                 self.stats.bytes_allocated -= buf.nbytes
+                buf.pool = None   # books settled here; destroy must not _forget
                 buf.destroy()
                 return
             self._free.setdefault(buf.size_class, []).append(buf)
             self._cached_bytes += buf.nbytes
+
+    def _forget(self, buf: AlignedBuffer) -> None:
+        """A handed-out buffer was destroyed without release(): drop it from
+        the outstanding and allocation books (called from destroy())."""
+        with self._cond:
+            self._outstanding -= buf.nbytes
+            self.stats.bytes_allocated -= buf.nbytes
+            self._cond.notify_all()
 
     def preallocate(self, sizes) -> None:
         """Warm the pool (the paper's 'preallocated buffers' mode)."""
@@ -158,6 +245,7 @@ class BufferPool:
             for lst in self._free.values():
                 for b in lst:
                     self.stats.bytes_allocated -= b.nbytes
+                    b.pool = None   # free-list buffers aren't outstanding
                     b.destroy()
             self._free.clear()
             self._cached_bytes = 0

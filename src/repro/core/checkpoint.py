@@ -7,6 +7,14 @@ Implements the paper's full C/R pipeline for JAX pytrees:
          → engine flush (async-capable)                 (§2 stage 3)
          → manifest + atomic commit                     (§2 stage 4)
 
+Stages 2–4 run as a STREAMING pipeline (core.pipeline.SnapshotPipeline,
+DESIGN.md §9): shards are declared by size, then snapshotted chunk-by-chunk
+into pooled aligned buffers and flushed as each extent lands, so D2H,
+quant-packing, CRC, and storage writes overlap instead of serializing.
+Async saves return after submission — blocking time is planning, not
+copying. ``streaming=False`` keeps the legacy full-copy path (benchmarks
+compare the two).
+
   restore: manifest read → lean object → planned (coalesced) tensor reads
            → host-to-device with target sharding (elastic resharding).
 
@@ -29,7 +37,7 @@ import shutil
 import threading
 import time
 import uuid
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import numpy as np
@@ -37,6 +45,7 @@ import numpy as np
 from .aggregation import ObjectSpec, Strategy, rank_padded_total
 from .engines import EngineConfig, ReadReq, SaveItem, make_cr_engine
 from .manifest import Manifest, crc32_of
+from .pipeline import SnapshotPipeline, build_save_puts, iter_host_shards
 from .resharding import assemble, dedupe_shards, normalize_index, plan_window
 from .serialization import (LEAN_KEY, TensorStub, as_bytes_view,
                             deserialize_lean, extract_tensors, iter_stubs,
@@ -63,11 +72,12 @@ class SaveMetrics:
     step: int
     total_bytes: int = 0
     extract_seconds: float = 0.0   # tensor extraction + lean serialization
-    d2h_seconds: float = 0.0       # device→host
+    d2h_seconds: float = 0.0       # device→host (staging copy when streaming)
     flush_seconds: float = 0.0     # engine write + fsync
     commit_seconds: float = 0.0
     blocking_seconds: float = 0.0  # time the training loop was stalled
     end_to_end_seconds: float = 0.0
+    mode: str = "blocking"         # blocking | pipelined | legacy[-async]
 
     @property
     def flush_gbps(self) -> float:
@@ -93,14 +103,27 @@ class CheckpointManager:
                  async_save: bool = False, keep: int = 3,
                  verify_crc: bool = True,
                  quantize_prefixes: tuple[str, ...] = (),
-                 quantize_min_bytes: int = 1 << 16):
+                 quantize_min_bytes: int = 1 << 16,
+                 streaming: bool = True,
+                 eager_snapshot: bool = False):
         """``quantize_prefixes``: tensor keys starting with any of these are
         int8-packed on save (e.g. ("opt/mu", "opt/nu") halves AdamW-moment
-        flush volume ~4x — see core.quant_codec)."""
+        flush volume ~4x — see core.quant_codec).
+
+        ``streaming``: route saves through the SnapshotPipeline (D2H, pack,
+        CRC and writes overlap; async saves return after submission).
+        ``streaming=False`` keeps the legacy full-host-copy path.
+        ``eager_snapshot``: async streaming saves copy ALL sources on the
+        blocking path (for callers that donate device buffers before the
+        pipeline drains); by default only in-place-mutable numpy sources are
+        copied — JAX arrays are immutable, holding a reference is a snapshot.
+        """
         self.directory = os.path.abspath(directory)
         os.makedirs(self.directory, exist_ok=True)
         self.engine_name = engine
-        self.config = config or EngineConfig()
+        # copy on ingest: two managers sharing one config object must not
+        # see each other's checksum/strategy mutations
+        self.config = replace(config) if config is not None else EngineConfig()
         if verify_crc:
             self.config.checksum = True
         self.engine = make_cr_engine(engine, self.config)
@@ -109,8 +132,11 @@ class CheckpointManager:
         self.verify_crc = verify_crc
         self.quantize_prefixes = tuple(quantize_prefixes)
         self.quantize_min_bytes = quantize_min_bytes
+        self.streaming = streaming
+        self.eager_snapshot = eager_snapshot
         self._flush_thread: threading.Thread | None = None
         self._flush_error: BaseException | None = None
+        self._snapshot_staged: threading.Event | None = None
         self.last_save_metrics: SaveMetrics | None = None
         self.last_restore_metrics: RestoreMetrics | None = None
         # Optional tiered.RestorePrefetcher: when set, restore of a step not
@@ -146,13 +172,20 @@ class CheckpointManager:
     # ----------------------------------------------------------------- save
     def save(self, step: int, state, *, rank: int | None = None,
              num_ranks: int | None = None) -> SaveMetrics:
-        """Checkpoint ``state``. Async mode returns after D2H; flush overlaps."""
+        """Checkpoint ``state``.
+
+        Streaming (default): D2H snapshot, quant-packing, CRC and storage
+        writes overlap per extent; async mode returns after submission.
+        Legacy (``streaming=False``): full host copy first, flush after."""
         self.wait()  # at most one checkpoint in flight
         t_start = time.perf_counter()
-        metrics = SaveMetrics(step=step)
-
         rank = jax.process_index() if rank is None else rank
         num_ranks = jax.process_count() if num_ranks is None else num_ranks
+        if self.streaming:
+            mode = "pipelined" if self.async_save else "blocking"
+        else:
+            mode = "legacy-async" if self.async_save else "legacy"
+        metrics = SaveMetrics(step=step, mode=mode)
 
         # Stage 1: tensor extraction + lean-object serialization.
         t0 = time.perf_counter()
@@ -160,6 +193,80 @@ class CheckpointManager:
         lean_blob = serialize_lean(lean_tree)
         metrics.extract_seconds = time.perf_counter() - t0
 
+        if self.streaming:
+            self._save_streaming(step, tensors, lean_blob, rank, num_ranks,
+                                 metrics, t_start)
+        else:
+            self._save_legacy(step, tensors, lean_blob, rank, num_ranks,
+                              metrics, t_start)
+        self.last_save_metrics = metrics
+        return metrics
+
+    def _save_streaming(self, step, tensors, lean_blob, rank, num_ranks,
+                        metrics, t_start) -> None:
+        """Pipelined save: declare sizes, then snapshot→stage→flush overlap.
+
+        Blocking portion = spec building + prefix-sum + (for async) eager
+        copies of in-place-mutable sources; every byte of D2H and packing
+        runs on the pipeline worker, interleaved with the engine's writes.
+        """
+        puts, quantized_keys = build_save_puts(
+            tensors, lean_blob,
+            quantize_prefixes=self.quantize_prefixes,
+            quantize_min_bytes=self.quantize_min_bytes,
+            copy_mutable=self.async_save,
+            copy_all=self.async_save and self.eager_snapshot)
+        metrics.total_bytes = sum(p.spec.nbytes for p in puts)
+
+        # Cross-rank prefix sum for the single-file layout (paper §3.6) —
+        # spec sizes are exact (packed sizes are deterministic), so the
+        # exchange happens before any payload is materialized.
+        rank_totals = None
+        if Strategy.parse(self.config.strategy) is Strategy.SINGLE_FILE:
+            local_total = rank_padded_total(
+                [ObjectSpec(p.spec.key, p.spec.nbytes) for p in puts],
+                self.config.align)
+            rank_totals = self._allgather_totals(local_total, rank, num_ranks)
+
+        tmp = os.path.join(self.directory,
+                           f"{step_dir_name(step)}.tmp-{uuid.uuid4().hex[:8]}")
+        os.makedirs(tmp, exist_ok=True)
+        pipeline = SnapshotPipeline(self.engine)
+
+        staged = threading.Event()
+
+        def run():
+            try:
+                t1 = time.perf_counter()
+                manifest = pipeline.run(tmp, puts, step=step, rank=rank,
+                                        num_ranks=num_ranks,
+                                        rank_totals=rank_totals,
+                                        on_staged=staged.set)
+                metrics.flush_seconds = time.perf_counter() - t1
+                st = self.engine.last_save_stats
+                metrics.d2h_seconds = st.copy_seconds + st.alloc_seconds
+                self._commit(manifest, tmp, step, quantized_keys, metrics,
+                             t_start)
+            finally:
+                staged.set()   # never leave wait_snapshotted() hanging
+
+        if self.async_save:
+            metrics.blocking_seconds = time.perf_counter() - t_start
+            self._flush_error = None
+            self._snapshot_staged = staged
+            th = threading.Thread(target=self._guard(run), daemon=True,
+                                  name=f"ckpt-pipeline-{step}")
+            self._flush_thread = th
+            th.start()
+        else:
+            run()
+            metrics.blocking_seconds = metrics.end_to_end_seconds
+
+    def _save_legacy(self, step, tensors, lean_blob, rank, num_ranks,
+                     metrics, t_start) -> None:
+        """Monolithic save: full host copy (and quant-packing) inline on the
+        blocking path, then a one-shot engine flush (async: on a thread).
+        Kept for A/B benchmarking against the pipelined path."""
         # Stage 2: device→host. Shards owned by this process; DP replicas
         # deduplicated by replica_id == 0.
         t0 = time.perf_counter()
@@ -203,22 +310,8 @@ class CheckpointManager:
                                         num_ranks=num_ranks,
                                         rank_totals=rank_totals)
             metrics.flush_seconds = time.perf_counter() - t1
-            t2 = time.perf_counter()
-            manifest.extra["save_metrics"] = {
-                "total_bytes": metrics.total_bytes,
-                "flush_seconds": metrics.flush_seconds,
-            }
-            if quantized_keys:
-                manifest.extra["quantized"] = quantized_keys
-            manifest.save(tmp)
-            final = os.path.join(self.directory, step_dir_name(step))
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._fsync_dir(self.directory)
-            metrics.commit_seconds = time.perf_counter() - t2
-            metrics.end_to_end_seconds = time.perf_counter() - t_start
-            self._gc_old()
+            self._commit(manifest, tmp, step, quantized_keys, metrics,
+                         t_start)
 
         if self.async_save:
             metrics.blocking_seconds = time.perf_counter() - t_start
@@ -230,8 +323,26 @@ class CheckpointManager:
         else:
             flush()
             metrics.blocking_seconds = metrics.end_to_end_seconds
-        self.last_save_metrics = metrics
-        return metrics
+
+    def _commit(self, manifest, tmp, step, quantized_keys, metrics,
+                t_start) -> None:
+        """Manifest write + atomic rename + GC (paper §2 stage 4)."""
+        t2 = time.perf_counter()
+        manifest.extra["save_metrics"] = {
+            "total_bytes": metrics.total_bytes,
+            "flush_seconds": metrics.flush_seconds,
+        }
+        if quantized_keys:
+            manifest.extra["quantized"] = quantized_keys
+        manifest.save(tmp)
+        final = os.path.join(self.directory, step_dir_name(step))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._fsync_dir(self.directory)
+        metrics.commit_seconds = time.perf_counter() - t2
+        metrics.end_to_end_seconds = time.perf_counter() - t_start
+        self._gc_old()
 
     def _guard(self, fn):
         def wrapped():
@@ -241,12 +352,24 @@ class CheckpointManager:
                 self._flush_error = e
         return wrapped
 
+    def wait_snapshotted(self) -> None:
+        """Block until the in-flight async save holds a stable snapshot —
+        every source byte staged into pooled buffers (or copied). Callers
+        that mutate IN PLACE or DONATE the arrays they saved must call this
+        before doing so; the flush keeps draining in the background.
+        (JAX rebinding needs no barrier: old arrays stay alive and
+        immutable while the pipeline references them.)"""
+        ev = self._snapshot_staged
+        if ev is not None:
+            ev.wait()
+
     def wait(self) -> None:
         """Block until any in-flight async flush committed."""
         th = self._flush_thread
         if th is not None:
             th.join()
             self._flush_thread = None
+        self._snapshot_staged = None
         if self._flush_error is not None:
             err, self._flush_error = self._flush_error, None
             raise RuntimeError("async checkpoint flush failed") from err
@@ -354,16 +477,11 @@ class CheckpointManager:
     # ------------------------------------------------------------- internals
     @staticmethod
     def _host_shards(t):
-        """Yield (host_array, global_index) for shards this process owns."""
-        if isinstance(t, jax.Array) and hasattr(t, "addressable_shards"):
-            for sh in t.addressable_shards:
-                if sh.replica_id != 0:
-                    continue  # DP replica dedup
-                idx = normalize_index(sh.index, t.shape)
-                yield to_numpy_view(sh.data), idx
-        else:
-            arr = to_numpy_view(t)
-            yield arr, tuple((0, s) for s in arr.shape)
+        """Yield (host_array, global_index) for shards this process owns —
+        the eager (legacy-path) view over pipeline.iter_host_shards, so the
+        shard-ownership rule lives in exactly one place."""
+        for arr, idx in iter_host_shards(t):
+            yield to_numpy_view(arr), idx
 
     @staticmethod
     def _allgather_totals(local_total: int, rank: int, num_ranks: int) -> list[int]:

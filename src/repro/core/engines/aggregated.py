@@ -1,12 +1,17 @@
 """AggregatedEngine — the paper's "ideal approach", productionized.
 
-Write path (paper Observations 1, 2, 4):
+Write path (paper Observations 1, 2, 4), exposed as a STREAM
+(``begin_save`` / ``put`` / ``end_save``; batch ``save`` is a degenerate
+client that puts every item and drains):
   · layout per the configured aggregation strategy (default: single aggregated
-    file with cross-rank prefix-sum offsets),
+    file with cross-rank prefix-sum offsets), planned from sizes alone before
+    any payload exists,
   · request-level coalescing: small objects are staged into pooled aligned
     buffers and flushed as FEW LARGE writes (one per ~coalesce_bytes group),
   · large objects are staged through a small ring of chunk buffers so the
     memcpy of chunk k+1 overlaps the write of chunk k (double buffering),
+  · staged bytes in flight are bounded by ``config.inflight_bytes`` —
+    backpressure reaps completed writes before staging more,
   · O_DIRECT by default (4.8× write uplift in the paper), deep submission
     queues, batched io_uring submission, optional registered buffers.
 
@@ -19,107 +24,247 @@ Restore path (paper Observation 3):
 from __future__ import annotations
 
 import time
+import zlib
 
 import numpy as np
 
 from ..aggregation import Extent, coalesce
-from ..buffers import align_up
+from ..buffers import BufferPool, StageBudget, align_up
 from ..io_engine import IORequest, OP_READ, OP_WRITE
-from ..manifest import Manifest, crc32_of
-from .base import CREngine, IOStats, ReadReq, SaveItem, item_mv
+from ..manifest import Manifest
+from .base import (CREngine, IOStats, ReadReq, SaveItem, SaveSpec, SaveStream,
+                   as_u8, spec_of)
+
+
+class _Group:
+    """One coalesce group being filled across put() calls."""
+
+    __slots__ = ("extents", "large", "buf", "filled", "seen", "submitted")
+
+    def __init__(self, extents: list[Extent], large: bool):
+        self.extents = extents
+        self.large = large          # single object streamed in chunks
+        self.buf = None             # staging buffer while filling
+        self.filled = 0             # logical bytes staged so far
+        self.seen = 0               # member objects fully put
+        self.submitted = False
+
+
+class _AggSaveStream(SaveStream):
+    """Streaming writer against the io_engine request stream.
+
+    Each put stages its bytes into pooled aligned buffers (coalescing small
+    contiguous objects, chunking large ones) and submits the write
+    immediately — storage I/O overlaps the caller's next snapshot/pack.
+    """
+
+    def __init__(self, eng: "AggregatedEngine", ckpt_dir: str,
+                 specs: list[SaveSpec], step: int, rank: int, num_ranks: int,
+                 rank_totals: list[int] | None):
+        self.eng = eng
+        self.cfg = cfg = eng.config
+        self.step, self.num_ranks = step, num_ranks
+        self.specs = list(specs)
+        self.stats = IOStats()
+        self.t0 = time.perf_counter()
+        self.plan = eng._plan(self.specs, rank, rank_totals)
+        self.extents = {e.key: e for e in self.plan.extents}
+        self.fds = eng._open_files(ckpt_dir, self.plan, "w", preallocate=True)
+        self.stats.files = len(self.fds)
+        self.io = eng._make_io()
+        self.budget = StageBudget(cfg.inflight_bytes)
+        # clamp staging units to half the budget so the cap is HARD: every
+        # buffer class then fits twice, and the admits() idle-override can
+        # never be reached by an oversized single unit
+        self._chunk = cfg.chunk_bytes
+        thr = cfg.coalesce_bytes
+        if cfg.inflight_bytes is not None:
+            half = max(cfg.inflight_bytes // 2, 1)
+            unit = max(cfg.align, 1 << (half.bit_length() - 1))  # floor pow2
+            self._chunk = min(self._chunk, unit)
+            thr = min(thr, unit)
+        self.crcs: dict[str, int] = {}
+        self._inflight: dict[int, object] = {}   # token -> buffer to release
+        self._token = 0
+        self._pos: dict[str, int] = {}           # chunked-put progress per key
+        self._group_of: dict[str, _Group] = {}
+        self._groups: list[_Group] = []
+        for g in coalesce(self.plan.extents, thr, cfg.align):
+            grp = _Group(g, len(g) == 1 and g[0].nbytes > self._chunk)
+            self._groups.append(grp)
+            for e in g:
+                self._group_of[e.key] = grp
+        self._state = "open"            # open → ended | aborted
+
+    # ------------------------------------------------------------- plumbing
+    def _reap(self, block_min: int) -> None:
+        for c in self.io.poll(min_n=block_min):
+            buf = self._inflight.pop(c.user_data, None)
+            if buf is not None:
+                self.budget.sub(buf.nbytes)
+                buf.release()
+
+    def _acquire(self, span: int):
+        """Pooled staging buffer, bounded: reap completed writes until the
+        staged bytes in flight admit one more buffer (backpressure).
+
+        The bound is hard for clients that put objects in layout order
+        (batch save and the snapshot pipeline): units are clamped to half
+        the budget and every blocker is a reapable write. A client that
+        interleaves puts across MANY coalesce groups can hold one open
+        group buffer per interleaved group above the budget — open group
+        buffers are only reclaimable by completing their groups."""
+        need = BufferPool.size_class(max(span, 1))
+        while not self.budget.admits(need) and self._inflight:
+            self._reap(1)
+        buf = self.eng.pool.get(span)
+        self.budget.add(buf.nbytes)
+        return buf
+
+    def _submit(self, fd: int, file_off: int, buf, span: int) -> None:
+        self._token += 1
+        self._inflight[self._token] = buf
+        self.io.submit([IORequest(OP_WRITE, fd, file_off, buf, 0, span,
+                                  user_data=self._token)])
+        self.stats.io_requests += 1
+        while self.io.inflight >= self.cfg.queue_depth:
+            self._reap(1)
+
+    # ------------------------------------------------------------------ API
+    def put(self, key: str, data, pos: int = 0) -> None:
+        if self._state != "open":
+            raise RuntimeError(f"put() on a {self._state} save stream")
+        cfg = self.cfg
+        mv = as_u8(data)
+        e = self.extents[key]
+        g = self._group_of[key]
+        if cfg.checksum:
+            self.crcs[key] = zlib.crc32(mv, self.crcs.get(key, 0)) & 0xFFFFFFFF
+        if g.large:
+            expect = self._pos.get(key, 0)
+            if pos != expect:
+                raise ValueError(f"out-of-order put for {key!r}: "
+                                 f"pos {pos} != expected {expect}")
+            if pos % cfg.align:
+                raise ValueError(f"partial put for {key!r} must start on a "
+                                 f"{cfg.align}-byte boundary")
+            if pos + mv.nbytes > e.nbytes:
+                raise ValueError(f"put overruns {key!r}")
+            p = 0
+            while p < mv.nbytes:
+                n = min(self._chunk, mv.nbytes - p)
+                ta = time.perf_counter()
+                buf = self._acquire(align_up(n, cfg.align))
+                tb = time.perf_counter()
+                buf.view(0, n)[:] = mv[p:p + n]
+                tc = time.perf_counter()
+                self.stats.alloc_seconds += tb - ta
+                self.stats.copy_seconds += tc - tb
+                self._submit(self.fds[e.path], e.offset + pos + p, buf,
+                             align_up(n, cfg.align))
+                p += n
+            self._pos[key] = pos + mv.nbytes
+            g.filled += mv.nbytes
+            if self._pos[key] == e.nbytes:
+                g.seen += 1
+                g.submitted = True
+            return
+        # coalesced member: whole-object put staged into the group buffer
+        if pos or mv.nbytes != e.nbytes:
+            raise ValueError(f"coalesced object {key!r} needs one whole put")
+        first, last = g.extents[0], g.extents[-1]
+        span = last.offset + align_up(last.nbytes, cfg.align) - first.offset
+        if g.buf is None:
+            ta = time.perf_counter()
+            g.buf = self._acquire(span)
+            self.stats.alloc_seconds += time.perf_counter() - ta
+        if mv.nbytes:
+            tb = time.perf_counter()
+            g.buf.view(e.offset - first.offset, e.nbytes)[:] = mv
+            self.stats.copy_seconds += time.perf_counter() - tb
+        g.filled += e.nbytes
+        g.seen += 1
+        if g.seen == len(g.extents) and not g.submitted:
+            g.submitted = True
+            buf, g.buf = g.buf, None
+            self._submit(self.fds[first.path], first.offset, buf, span)
+
+    def end_save(self) -> Manifest:
+        if self._state != "open":
+            raise RuntimeError("end_save() called twice" if
+                               self._state == "ended" else
+                               "end_save() after abort()")
+        missing = [e.key for g in self._groups if not g.submitted
+                   for e in g.extents]
+        if missing:
+            self.abort()
+            raise RuntimeError(f"end_save with unfilled objects: {missing[:5]}")
+        try:
+            while self.io.inflight:
+                self._reap(1)
+            self._reap(0)   # drain engines that complete inline (posix)
+            t_io0 = time.perf_counter()
+            self.eng._fsync_all(self.io, self.fds)
+            self.stats.io_seconds += time.perf_counter() - t_io0
+        finally:
+            self._state = "ended"
+            self.io.close()
+            self.eng._close_files(self.fds)
+        self.stats.logical_bytes = self.plan.total_logical_bytes
+        self.stats.peak_staged_bytes = self.budget.peak
+        self.stats.seconds = time.perf_counter() - self.t0
+        self.eng.last_save_stats = self.stats
+        return self.eng._manifest_from(self.specs, self.plan, step=self.step,
+                                       num_ranks=self.num_ranks,
+                                       crcs=self.crcs or None)
+
+    def abort(self) -> None:
+        if self._state != "open":
+            return
+        self._state = "aborted"
+        try:
+            try:
+                while self.io.inflight:
+                    self._reap(1)
+                self._reap(0)
+            except BaseException:
+                pass   # inflight state unknown; buffers below still released
+            self.io.close()
+        finally:
+            self.eng._close_files(self.fds)
+            for buf in self._inflight.values():
+                buf.release()
+            self._inflight.clear()
+            for g in self._groups:
+                if g.buf is not None:
+                    g.buf.release()
+                    g.buf = None
 
 
 class AggregatedEngine(CREngine):
     name = "aggregated"
+    supports_streaming = True
 
     # ------------------------------------------------------------------ save
+    def begin_save(self, ckpt_dir: str, specs: list[SaveSpec], *,
+                   step: int = 0, rank: int = 0, num_ranks: int = 1,
+                   rank_totals: list[int] | None = None) -> SaveStream:
+        return _AggSaveStream(self, ckpt_dir, specs, step, rank, num_ranks,
+                              rank_totals)
+
     def save(self, ckpt_dir: str, items: list[SaveItem], *, step: int = 0,
              rank: int = 0, num_ranks: int = 1,
              rank_totals: list[int] | None = None) -> Manifest:
-        cfg = self.config
-        t0 = time.perf_counter()
-        stats = IOStats()
-        plan = self._plan(items, rank, rank_totals)
-        by_key = {it.key: it for it in items}
-        groups = coalesce(plan.extents, cfg.coalesce_bytes, cfg.align)
-        fds = self._open_files(ckpt_dir, plan, "w", preallocate=True)
-        stats.files = len(fds)
-        crcs: dict[str, int] = {}
-
-        io = self._make_io()
-        inflight_bufs: dict[int, object] = {}  # user_data -> buffer to release
-        token = 0
-
-        def reap(block_min: int):
-            for c in io.poll(min_n=block_min):
-                buf = inflight_bufs.pop(c.user_data, None)
-                if buf is not None:
-                    buf.release()
-
-        def stage_and_write(fd: int, file_off: int, fill, span: int):
-            """Acquire buffer, run fill(buf), submit one write of span bytes."""
-            nonlocal token
-            ta = time.perf_counter()
-            buf = self.pool.get(span)
-            tb = time.perf_counter()
-            fill(buf)
-            tc = time.perf_counter()
-            stats.alloc_seconds += tb - ta
-            stats.copy_seconds += tc - tb
-            token += 1
-            inflight_bufs[token] = buf
-            io.submit([IORequest(OP_WRITE, fd, file_off, buf, 0, span,
-                                 user_data=token)])
-            stats.io_requests += 1
-            while io.inflight >= cfg.queue_depth:
-                reap(1)
-
+        stream = self.begin_save(ckpt_dir, [spec_of(it) for it in items],
+                                 step=step, rank=rank, num_ranks=num_ranks,
+                                 rank_totals=rank_totals)
         try:
-            for group in groups:
-                first, last = group[0], group[-1]
-                if len(group) == 1 and first.nbytes > cfg.chunk_bytes:
-                    # Large object: chunked staging, pipelined with writes.
-                    mv = item_mv(by_key[first.key])
-                    if cfg.checksum:
-                        crcs[first.key] = crc32_of(mv)
-                    pos = 0
-                    while pos < first.nbytes:
-                        n = min(cfg.chunk_bytes, first.nbytes - pos)
-                        chunk = mv[pos:pos + n]
-                        stage_and_write(
-                            fds[first.path], first.offset + pos,
-                            lambda b, c=chunk, n=n: b.view(0, n).__setitem__(
-                                slice(None), c),
-                            align_up(n, cfg.align))
-                        pos += n
-                else:
-                    # Coalesced group: one staged buffer, ONE write.
-                    span = (last.offset + align_up(last.nbytes, cfg.align)
-                            - first.offset)
-
-                    def fill(buf, group=group, first=first):
-                        for e in group:
-                            mv = item_mv(by_key[e.key])
-                            buf.view(e.offset - first.offset, e.nbytes)[:] = mv
-                            if cfg.checksum:
-                                crcs[e.key] = crc32_of(mv)
-
-                    stage_and_write(fds[first.path], first.offset, fill, span)
-            while io.inflight:
-                reap(1)
-            reap(0)   # drain engines that complete inline (posix)
-            t_io0 = time.perf_counter()
-            self._fsync_all(io, fds)
-            stats.io_seconds += time.perf_counter() - t_io0
-        finally:
-            io.close()
-            self._close_files(fds)
-
-        stats.logical_bytes = plan.total_logical_bytes
-        stats.seconds = time.perf_counter() - t0
-        self.last_save_stats = stats
-        return self._manifest_from(items, plan, step=step,
-                                   num_ranks=num_ranks, crcs=crcs or None)
+            for it in items:
+                stream.put(it.key, it.data)
+            return stream.end_save()
+        except BaseException:
+            stream.abort()
+            raise
 
     # ------------------------------------------------------------------ read
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -47,6 +47,28 @@ class SaveItem:
 
 
 @dataclass
+class SaveSpec:
+    """Metadata-only declaration of one object a streaming save will ``put``.
+
+    ``SaveItem`` minus the payload: the layout planner assigns file offsets
+    from object sizes alone, so a save can be planned — and the cross-rank
+    prefix sum exchanged — before a single byte is staged (quantized payload
+    sizes are deterministic too, see ``quant_codec.packed_nbytes``)."""
+    key: str
+    nbytes: int
+    dtype: str | None = None
+    global_shape: tuple[int, ...] | None = None
+    index: tuple[tuple[int, int], ...] | None = None
+    is_blob: bool = False
+    record_key: str | None = None
+
+
+def spec_of(item: SaveItem) -> SaveSpec:
+    return SaveSpec(item.key, item.nbytes, item.dtype, item.global_shape,
+                    item.index, item.is_blob, item.record_key)
+
+
+@dataclass
 class ReadReq:
     """One byte-range to read back.
 
@@ -70,6 +92,7 @@ class IOStats:
     alloc_seconds: float = 0.0   # buffer acquisition time (paper Fig 13)
     copy_seconds: float = 0.0    # staging memcpy time
     io_seconds: float = 0.0      # submit+wait time
+    peak_staged_bytes: int = 0   # max staged bytes in flight (backpressure)
 
     @property
     def gbps(self) -> float:
@@ -92,17 +115,108 @@ class EngineConfig:
     fsync_on_save: bool = True
     truncate: bool = True             # False: multi-rank shared-file mode
     align: int = PAGE
+    inflight_bytes: int = 256 << 20   # streaming-save staged-byte budget
 
     def normalized(self) -> "EngineConfig":
-        self.strategy = Strategy.parse(self.strategy)
-        self.backend = resolve_backend(self.backend)
-        return self
+        """Resolved copy (strategy enum, concrete backend). Pure: the
+        receiver is left untouched, so one config object can be shared by
+        several engines/managers without them corrupting each other."""
+        return replace(self, strategy=Strategy.parse(self.strategy),
+                       backend=resolve_backend(self.backend))
+
+
+class SaveStream:
+    """One in-progress streaming save (returned by ``CREngine.begin_save``).
+
+    Contract: every spec declared at ``begin_save`` must be fully ``put``
+    before ``end_save``; all calls come from one thread at a time (the
+    pipeline's worker), though that may differ from ``begin_save``'s caller.
+    Partial puts (``pos > 0``, in order, align-granular) are only valid for
+    objects that stand alone in the layout (larger than ``chunk_bytes``)."""
+
+    def put(self, key: str, data, pos: int = 0) -> None:
+        raise NotImplementedError
+
+    def end_save(self) -> Manifest:
+        raise NotImplementedError
+
+    def abort(self) -> None:
+        """Tear down after a failure; safe to call after end_save (no-op)."""
+
+
+class _BufferedSaveStream(SaveStream):
+    """Batch adapter: engines without a native streaming path accumulate the
+    puts and run one batch ``save`` at ``end_save`` — same data path and
+    manifests as before, no stage/flush overlap."""
+
+    def __init__(self, engine: "CREngine", ckpt_dir: str,
+                 specs: list[SaveSpec], step: int, rank: int, num_ranks: int,
+                 rank_totals: list[int] | None):
+        self.engine = engine
+        self.ckpt_dir = ckpt_dir
+        self.specs = list(specs)
+        self.kw = dict(step=step, rank=rank, num_ranks=num_ranks,
+                       rank_totals=rank_totals)
+        self._parts: dict[str, list[tuple[int, object]]] = {}
+        self._state = "open"            # open → ended | aborted
+
+    def put(self, key: str, data, pos: int = 0) -> None:
+        if self._state != "open":
+            raise RuntimeError(f"put() on a {self._state} save stream")
+        if not isinstance(data, bytes):
+            # own the bytes: once a put returns, the save must never read
+            # caller memory again (the pipeline's staged-snapshot contract)
+            data = np.frombuffer(as_u8(data), np.uint8).copy()
+        self._parts.setdefault(key, []).append((pos, data))
+
+    def end_save(self) -> Manifest:
+        if self._state != "open":
+            raise RuntimeError("end_save() called twice" if
+                               self._state == "ended" else
+                               "end_save() after abort()")
+        self._state = "ended"
+        items: list[SaveItem] = []
+        for spec in self.specs:
+            parts = self._parts.get(spec.key)
+            if parts is None:
+                raise RuntimeError(f"missing put() for {spec.key!r}")
+            # same completeness contract as the native stream: the layout
+            # (and any cross-rank prefix sum) was planned from spec.nbytes,
+            # so partial coverage must fail loudly, not commit garbage
+            covered = 0
+            for pos, chunk in sorted(parts, key=lambda p: p[0]):
+                if pos != covered:
+                    raise RuntimeError(
+                        f"non-contiguous puts for {spec.key!r}: "
+                        f"byte {covered} missing")
+                covered += memoryview(chunk).nbytes
+            if covered != spec.nbytes:
+                raise RuntimeError(
+                    f"end_save with unfilled object {spec.key!r}: "
+                    f"{covered} of {spec.nbytes} bytes put")
+            if len(parts) == 1:
+                data = parts[0][1]
+            else:  # chunked puts: assemble the object
+                data = np.empty(spec.nbytes, np.uint8)
+                for pos, chunk in parts:
+                    mv = as_u8(chunk)
+                    data[pos:pos + mv.nbytes] = np.frombuffer(mv, np.uint8)
+            items.append(SaveItem(spec.key, data, spec.dtype,
+                                  spec.global_shape, spec.index,
+                                  spec.is_blob, spec.record_key))
+        return self.engine.save(self.ckpt_dir, items, **self.kw)
+
+    def abort(self) -> None:
+        if self._state == "open":
+            self._state = "aborted"
+        self._parts.clear()
 
 
 class CREngine:
     """Base class. Subclasses set ``name`` and override save/restore."""
 
     name = "base"
+    supports_streaming = False   # True: begin_save overlaps staging & flush
 
     def __init__(self, config: EngineConfig | None = None,
                  pool: BufferPool | None = None):
@@ -116,6 +230,16 @@ class CREngine:
              rank: int = 0, num_ranks: int = 1,
              rank_totals: list[int] | None = None) -> Manifest:
         raise NotImplementedError
+
+    def begin_save(self, ckpt_dir: str, specs: list[SaveSpec], *,
+                   step: int = 0, rank: int = 0, num_ranks: int = 1,
+                   rank_totals: list[int] | None = None) -> SaveStream:
+        """Open a streaming save: the layout is planned from ``specs`` up
+        front, then payloads arrive via ``put`` in any key order. Engines
+        with ``supports_streaming`` flush each staged extent as it lands;
+        this base fallback buffers and delegates to batch ``save``."""
+        return _BufferedSaveStream(self, ckpt_dir, specs, step, rank,
+                                   num_ranks, rank_totals)
 
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
         raise NotImplementedError
@@ -202,8 +326,13 @@ class CREngine:
                 io.fsync(fd)
 
 
-def item_mv(it: "SaveItem") -> memoryview:
-    m = memoryview(it.data)
+def as_u8(data) -> memoryview:
+    """Flat uint8 memoryview of any buffer-protocol object."""
+    m = memoryview(data)
     if m.format != "B" or m.ndim != 1:
         m = m.cast("B")
     return m
+
+
+def item_mv(it: "SaveItem") -> memoryview:
+    return as_u8(it.data)

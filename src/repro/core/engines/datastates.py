@@ -33,7 +33,8 @@ class DataStatesEngine(CREngine):
     name = "datastates"
 
     def __init__(self, config: EngineConfig | None = None, pool=None):
-        cfg = config or EngineConfig()
+        from dataclasses import replace
+        cfg = replace(config) if config is not None else EngineConfig()
         cfg.backend = "auto"           # uring when the kernel has it
         cfg.strategy = Strategy.FILE_PER_PROCESS
         cfg.direct = False             # buffered flush path

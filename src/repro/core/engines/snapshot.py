@@ -32,7 +32,8 @@ class SnapshotEngine(CREngine):
     name = "snapshot"
 
     def __init__(self, config: EngineConfig | None = None, pool=None):
-        cfg = config or EngineConfig()
+        from dataclasses import replace
+        cfg = replace(config) if config is not None else EngineConfig()
         cfg.backend = "threadpool"     # libaio-era stand-in
         cfg.direct = False             # buffered
         cfg.pooled_buffers = False     # dynamic allocation

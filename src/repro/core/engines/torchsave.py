@@ -26,7 +26,8 @@ class TorchSaveEngine(CREngine):
     name = "torchsave"
 
     def __init__(self, config: EngineConfig | None = None, pool=None):
-        cfg = config or EngineConfig()
+        from dataclasses import replace
+        cfg = replace(config) if config is not None else EngineConfig()
         cfg.backend = "posix"
         cfg.direct = False            # torch.save is buffered
         cfg.pooled_buffers = False

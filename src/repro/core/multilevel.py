@@ -69,11 +69,16 @@ class MultiLevelCheckpointer:
                  hedge_after_s: float = 5.0, min_bw_bytes_s: float = 50e6,
                  flush_workers: int = 4, copy_fn=None,
                  transfer_backend: str = "auto", direct: bool = False,
-                 chunk_bytes: int = 4 << 20, transfer=None, **mgr_kw):
+                 chunk_bytes: int = 4 << 20, transfer=None,
+                 stage_inflight_bytes: int | None = None, **mgr_kw):
         """``copy_fn=None`` (default) flushes through the tiered transfer
         engine; a callable selects the legacy per-file copy path with
         whole-file hedging. ``transfer`` injects a preconfigured
-        TieredTransferEngine (tests, shared pools)."""
+        TieredTransferEngine (tests, shared pools).
+        ``stage_inflight_bytes`` caps the flush's staged bytes in flight —
+        the same backpressure primitive the in-training SnapshotPipeline
+        uses, so both capture and tier flush stage through one bounded
+        pooled-buffer flow."""
         self.local = CheckpointManager(local_dir, engine=engine,
                                        config=config, **mgr_kw)
         self.remote_dir = os.path.abspath(remote_dir)
@@ -84,7 +89,8 @@ class MultiLevelCheckpointer:
         self.transfer = transfer or TieredTransferEngine(
             transfer_backend, chunk_bytes=chunk_bytes, direct=direct,
             queue_depth=flush_workers * 4, hedge_after_s=hedge_after_s,
-            min_bw_bytes_s=min_bw_bytes_s)
+            min_bw_bytes_s=min_bw_bytes_s,
+            inflight_bytes=stage_inflight_bytes)
         # restore-side: steps only at level 1 are prefetched extent-wise
         self.local.prefetcher = RestorePrefetcher(self.remote_dir,
                                                   self.transfer)
@@ -218,6 +224,11 @@ class MultiLevelCheckpointer:
                     Manifest.exists(os.path.join(self.remote_dir, name)):
                 out.append(int(name.split("_")[1]))
         return sorted(out)
+
+    def wait_snapshotted(self) -> None:
+        """Barrier on the local manager's staged snapshot (see
+        CheckpointManager.wait_snapshotted); the level-1 flush keeps going."""
+        self.local.wait_snapshotted()
 
     def wait(self) -> None:
         th = self._flush_thread

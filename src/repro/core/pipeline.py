@@ -1,0 +1,144 @@
+"""SnapshotPipeline — the streaming save path (snapshot ∥ stage ∥ flush).
+
+The legacy save materialized a full host copy of EVERY shard — plus inline
+int8 quant-packing — on the blocking path before the first byte hit storage,
+so async mode only hid the final flush stage. This module decomposes the save
+into stages that overlap at sub-tensor granularity (DataStates-LLM's lazy
+multi-stage pipeline, ByteCheckpoint's decomposed save; DESIGN.md §9):
+
+  1. declare   — ``build_save_puts`` walks the extracted tensors and emits
+                 ``SaveSpec``s (sizes only — quantized payload sizes are
+                 deterministic via ``quant_codec.packed_nbytes``) plus lazy
+                 ``resolve`` callables that materialize payload bytes.
+  2. plan      — ``CREngine.begin_save`` maps every spec to file extents
+                 before any payload exists; the cross-rank prefix sum runs
+                 on spec sizes, so it too leaves the blocking path early.
+  3. snapshot  — each ``resolve()`` produces host bytes (device→host view,
+                 quant pack) which the engine stream memcpys chunk-by-chunk
+                 into pooled ``AlignedBuffer``s — the staging copy IS the
+                 snapshot, double-buffered against the writes in flight.
+  4. flush     — every staged extent is submitted to the io_engine the
+                 moment it lands; ``EngineConfig.inflight_bytes`` caps the
+                 staged bytes in flight (``StageBudget`` backpressure).
+
+Mutation safety: JAX arrays are immutable, so holding references is a stable
+snapshot by construction. In-place-mutable sources (``np.ndarray``) are
+eagerly copied on the blocking path when ``copy_mutable`` is set (async
+saves); ``copy_all`` additionally copies device arrays for callers that will
+donate their buffers before the pipeline drains.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import numpy as np
+
+from .engines import SaveSpec
+from .manifest import Manifest
+from .resharding import normalize_index
+from .serialization import (LEAN_KEY, as_bytes_view, tensor_nbytes,
+                            to_numpy_view)
+
+
+@dataclass
+class PendingPut:
+    """One declared object plus the deferred materialization of its bytes."""
+    spec: SaveSpec
+    resolve: Callable[[], object]   # -> buffer-protocol of spec.nbytes bytes
+
+
+def iter_host_shards(t):
+    """Yield (array, global_index) for the shards this process owns.
+
+    No host copy happens here — materialization is deferred to stream time
+    (``PendingPut.resolve``) so the D2H lands directly in staging order.
+    DP replicas are deduplicated by ``replica_id == 0``.
+    """
+    if isinstance(t, jax.Array) and hasattr(t, "addressable_shards"):
+        for sh in t.addressable_shards:
+            if sh.replica_id != 0:
+                continue  # DP replica dedup
+            yield sh.data, normalize_index(sh.index, t.shape)
+    else:
+        yield t, tuple((0, s) for s in t.shape)
+
+
+def _n_elems(arr) -> int:
+    return int(np.prod(arr.shape, dtype=np.int64))
+
+
+def build_save_puts(tensors: dict, lean_blob: bytes, *,
+                    quantize_prefixes: tuple[str, ...] = (),
+                    quantize_min_bytes: int = 1 << 16,
+                    copy_mutable: bool = False,
+                    copy_all: bool = False
+                    ) -> tuple[list[PendingPut], list[str]]:
+    """Turn extracted tensors + the lean blob into declared pipeline puts.
+
+    Returns ``(puts, quantized_keys)``. Quant-packing and device→host
+    materialization are captured in the resolve closures, NOT executed —
+    they run on the pipeline worker, off the training loop's blocking path.
+    """
+    from . import quant_codec
+    puts: list[PendingPut] = []
+    quantized: list[str] = []
+    for key, t in tensors.items():
+        quant = (any(key.startswith(p) for p in quantize_prefixes)
+                 and tensor_nbytes(t) >= quantize_min_bytes
+                 and np.dtype(t.dtype).kind == "f")
+        if quant:
+            quantized.append(key)
+        for n, (arr, index) in enumerate(iter_host_shards(t)):
+            if copy_all or (copy_mutable and isinstance(arr, np.ndarray)):
+                # in-place-mutable source: stable pre-mutation snapshot now
+                arr = np.array(arr, copy=True)
+            if quant:
+                nbytes = quant_codec.packed_nbytes(_n_elems(arr))
+                resolve = (lambda a=arr: np.frombuffer(
+                    quant_codec.pack(to_numpy_view(a)), np.uint8))
+            else:
+                nbytes = tensor_nbytes(arr)
+                resolve = lambda a=arr: as_bytes_view(to_numpy_view(a))
+            puts.append(PendingPut(
+                SaveSpec(f"{key}#{n}", nbytes, str(arr.dtype),
+                         tuple(t.shape), index, record_key=key), resolve))
+    puts.append(PendingPut(SaveSpec(LEAN_KEY, len(lean_blob), is_blob=True),
+                           lambda: lean_blob))
+    return puts, quantized
+
+
+class SnapshotPipeline:
+    """Drives declared puts through an engine's streaming save.
+
+    With a ``supports_streaming`` engine (aggregated), resolve → stage →
+    submit run interleaved: while the io backend writes extent k, the worker
+    resolves and stages extent k+1. Engines without a native stream degrade
+    to the buffered batch path behind the same API.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def run(self, ckpt_dir: str, puts: list[PendingPut], *, step: int = 0,
+            rank: int = 0, num_ranks: int = 1,
+            rank_totals: list[int] | None = None,
+            on_staged: Callable[[], None] | None = None) -> Manifest:
+        """``on_staged`` fires once every put has been resolved and staged —
+        from then on the save no longer reads any caller-owned memory, so
+        callers may mutate or donate their arrays while the flush drains
+        (CheckpointManager.wait_snapshotted)."""
+        stream = self.engine.begin_save(
+            ckpt_dir, [p.spec for p in puts], step=step, rank=rank,
+            num_ranks=num_ranks, rank_totals=rank_totals)
+        try:
+            for p in puts:
+                stream.put(p.spec.key, p.resolve())
+            if on_staged is not None:
+                on_staged()
+            return stream.end_save()
+        except BaseException:
+            stream.abort()
+            raise

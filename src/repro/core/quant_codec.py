@@ -45,12 +45,26 @@ def _quantize(padded: np.ndarray):
     return _quant_ref(jnp.asarray(padded))
 
 
+def packed_rows(n_elems: int) -> int:
+    rows = -(-n_elems // GROUP_COLS)
+    return -(-rows // 8) * 8   # ROW_BLK alignment
+
+
+def packed_nbytes(n_elems: int) -> int:
+    """Exact ``pack`` output size for an ``n_elems``-element input.
+
+    The packed size depends only on the element count, so the streaming save
+    pipeline can plan file offsets (and the cross-rank prefix sum) before any
+    packing runs — quantization stays off the blocking path."""
+    rows = packed_rows(n_elems)
+    return HEADER.size + rows * GROUP_COLS + rows * 4
+
+
 def pack(arr: np.ndarray) -> bytes:
     """arr: any-shape fp array -> packed int8 bytes."""
     flat = np.ascontiguousarray(arr).reshape(-1).astype(np.float32)
     n = flat.nbytes
-    rows = -(-flat.size // GROUP_COLS)
-    rows = -(-rows // 8) * 8   # ROW_BLK alignment
+    rows = packed_rows(flat.size)
     padded = np.zeros((rows, GROUP_COLS), np.float32)
     padded.reshape(-1)[:flat.size] = flat
     q, s = _quantize(padded)

@@ -42,7 +42,8 @@ from collections import deque
 from dataclasses import dataclass, field
 
 from .aggregation import Extent, chunk_extents
-from .buffers import AlignedBuffer, BufferPool, PAGE, align_up, aligned_span
+from .buffers import (AlignedBuffer, BufferPool, PAGE, StageBudget, align_up,
+                      aligned_span)
 from .io_engine import (EngineStats, IOEngine, IORequest, OP_READ, OP_WRITE,
                         make_engine, open_for, resolve_backend)
 from .manifest import MANIFEST_NAME, Manifest
@@ -56,6 +57,7 @@ class TransferStats:
     seconds: float = 0.0
     hedged: int = 0           # duplicate extent requests issued
     hedge_wins: int = 0       # duplicates that beat the original
+    peak_staged_bytes: int = 0  # max staged bytes in flight (backpressure)
     backend: str = ""
     read_stats: EngineStats = field(default_factory=EngineStats)   # source tier
     write_stats: EngineStats = field(default_factory=EngineStats)  # dest tier
@@ -75,7 +77,7 @@ class _Segment:
 
     __slots__ = ("path", "offset", "nbytes", "src_fd", "dst_fd", "state",
                  "buf", "deadline", "primary_read", "primary_write",
-                 "writes_out", "hedged_read", "hedged_write")
+                 "writes_out", "hedged_read", "hedged_write", "buf_forgiven")
 
     def __init__(self, path: str, offset: int, nbytes: int,
                  src_fd: int, dst_fd: int):
@@ -87,6 +89,7 @@ class _Segment:
         self.primary_read = self.primary_write = -1
         self.writes_out = 0
         self.hedged_read = self.hedged_write = False
+        self.buf_forgiven = False      # buf bytes already dropped from budget
 
 
 class TieredTransferEngine:
@@ -101,10 +104,15 @@ class TieredTransferEngine:
                  fsync: bool = True,
                  align: int = PAGE,
                  pool: BufferPool | None = None,
+                 inflight_bytes: int | None = None,
                  engine_factory=None):
+        """``inflight_bytes`` caps staged bytes in flight (StageBudget — the
+        same backpressure primitive as the streaming save pipeline); None
+        leaves staging bounded only by ``queue_depth`` segments."""
         self.backend = resolve_backend(backend)
         self.chunk_bytes = chunk_bytes
         self.queue_depth = queue_depth
+        self.inflight_bytes = inflight_bytes
         self.direct = direct
         self.hedge_after_s = hedge_after_s
         self.min_bw_bytes_s = min_bw_bytes_s
@@ -274,11 +282,41 @@ class TieredTransferEngine:
         reads: dict[int, tuple[_Segment, AlignedBuffer]] = {}
         writes: dict[int, _Segment] = {}
         token = 0
+        budget = StageBudget(self.inflight_bytes)
+        forgiven_reads: set[int] = set()
+
+        def release(buf: AlignedBuffer):
+            budget.sub(buf.nbytes)
+            buf.release()
+
+        def release_read(tok: int, buf: AlignedBuffer):
+            if tok in forgiven_reads:   # bytes already dropped at hedge win
+                forgiven_reads.discard(tok)
+                buf.release()
+            else:
+                release(buf)
+
+        def forgive_stragglers(seg: _Segment, winner_tok: int):
+            """A hedge attempt won this segment's read: the losing attempt's
+            buffer is a straggler — drop its bytes from the budget NOW so
+            backpressure never re-serializes issuance behind the very
+            straggler the hedge just masked."""
+            for tok, (s, b) in reads.items():
+                if s is seg and tok != winner_tok and tok not in forgiven_reads:
+                    budget.sub(b.nbytes)
+                    forgiven_reads.add(tok)
+
+        def release_seg_buf(seg: _Segment):
+            if seg.buf_forgiven:
+                seg.buf.release()
+            else:
+                release(seg.buf)
 
         def issue_read(seg: _Segment, hedge: bool = False):
             nonlocal token
             token += 1
             buf = self.pool.get(align_up(seg.nbytes, self.align))
+            budget.add(buf.nbytes)
             reads[token] = (seg, buf)
             if not hedge:
                 seg.primary_read = token
@@ -303,17 +341,18 @@ class TieredTransferEngine:
         def on_read(c):
             seg, buf = reads.pop(c.user_data)
             if c.error is not None:
-                buf.release()
+                release_read(c.user_data, buf)
                 if seg.state != "reading":
                     return                 # loser failed after the win
                 if any(s is seg for s, _b in reads.values()):
                     return                 # sibling attempt still racing
                 raise c.error              # ALL read attempts failed
             if seg.state != "reading":     # losing hedge attempt: discard
-                buf.release()
+                release_read(c.user_data, buf)
                 return
             if c.user_data != seg.primary_read:
                 stats.hedge_wins += 1
+            forgive_stragglers(seg, c.user_data)
             seg.buf = buf
             issue_write(seg)
 
@@ -323,7 +362,7 @@ class TieredTransferEngine:
             if c.error is not None:
                 if seg.state != "writing":
                     if seg.state == "done" and seg.writes_out == 0:
-                        seg.buf.release()
+                        release_seg_buf(seg)
                     return                 # loser failed after the win
                 if any(s is seg for s in writes.values()):
                     return                 # sibling attempt still racing
@@ -334,8 +373,13 @@ class TieredTransferEngine:
                 seg.state = "done"
                 stats.bytes += seg.nbytes
                 active.discard(seg)
+                if seg.writes_out > 0 and not seg.buf_forgiven:
+                    # a losing write still references buf: straggler — stop
+                    # counting it against issuance (mirrors forgive_stragglers)
+                    budget.sub(seg.buf.nbytes)
+                    seg.buf_forgiven = True
             if seg.state == "done" and seg.writes_out == 0:
-                seg.buf.release()          # safe: no attempt references it
+                release_seg_buf(seg)       # safe: no attempt references it
 
         def maybe_hedge():
             now = time.perf_counter()
@@ -364,6 +408,12 @@ class TieredTransferEngine:
         # exact tail the hedge was issued against.
         while pending or active:
             while pending and len(active) < self.queue_depth:
+                # staged-byte backpressure: defer issuance (never block the
+                # completion loop) until writes land and release buffers
+                need = BufferPool.size_class(
+                    align_up(max(pending[0].nbytes, 1), self.align))
+                if not budget.admits(need):
+                    break
                 seg = pending.popleft()
                 active.add(seg)
                 stats.extents += 1
@@ -382,6 +432,7 @@ class TieredTransferEngine:
                 on_write(c)
             maybe_hedge()
 
+        stats.peak_staged_bytes = budget.peak
         if not reads and not writes:
             return None
         # straggling losers: their buffers (private read buffers + the

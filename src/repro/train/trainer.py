@@ -37,6 +37,7 @@ class TrainerConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     ckpt_engine: str = "aggregated"
     async_ckpt: bool = True
+    streaming_ckpt: bool = True          # SnapshotPipeline save path
     multilevel_remote: str = ""          # non-empty enables two-level C/R
     keep: int = 3
     log_every: int = 10
@@ -62,11 +63,13 @@ class Trainer:
             self.ckpt = MultiLevelCheckpointer(
                 tcfg.ckpt_dir, tcfg.multilevel_remote,
                 engine=tcfg.ckpt_engine, config=engine_config,
-                async_save=False, keep=tcfg.keep)
+                async_save=False, keep=tcfg.keep,
+                streaming=tcfg.streaming_ckpt)
         elif tcfg.ckpt_every:
             self.ckpt = CheckpointManager(
                 tcfg.ckpt_dir, engine=tcfg.ckpt_engine, config=engine_config,
-                async_save=tcfg.async_ckpt, keep=tcfg.keep)
+                async_save=tcfg.async_ckpt, keep=tcfg.keep,
+                streaming=tcfg.streaming_ckpt)
         else:
             self.ckpt = None
         self.metrics_log: list[dict] = []
@@ -113,12 +116,20 @@ class Trainer:
                 start_step = int(np.asarray(state["step"]))
 
         ckpt_block_s = 0.0
+        ckpt_reported_block_s = 0.0      # sum of SaveMetrics.blocking_seconds
         t_start = time.perf_counter()
         ctx = self.mesh if self.mesh is not None else _nullctx()
         with ctx:
             for step in range(start_step, self.tcfg.steps):
                 batch = {k: jnp.asarray(v)
                          for k, v in self.pipeline.batch_at(step).items()}
+                if self.ckpt is not None:
+                    # step_fn donates the state buffers an in-flight pipelined
+                    # save may still be snapshotting — barrier on the staged
+                    # snapshot (NOT the flush), and count it as stall time
+                    t0 = time.perf_counter()
+                    self.ckpt.wait_snapshotted()
+                    ckpt_block_s += time.perf_counter() - t0
                 state, metrics = step_fn(state, batch)
                 self.pipeline.state.step = step + 1
                 if self.tcfg.log_every and step % self.tcfg.log_every == 0:
@@ -129,14 +140,16 @@ class Trainer:
                         and (step + 1) % self.tcfg.ckpt_every == 0):
                     jax.block_until_ready(state["params"])
                     t0 = time.perf_counter()
-                    self.ckpt.save(step + 1, self._full_state(state))
+                    sm = self.ckpt.save(step + 1, self._full_state(state))
                     ckpt_block_s += time.perf_counter() - t0
+                    ckpt_reported_block_s += sm.blocking_seconds
         jax.block_until_ready(state["step"])
         wall = time.perf_counter() - t_start
         if self.ckpt is not None:
             self.ckpt.wait()
         return {"state": state, "wall_seconds": wall,
                 "ckpt_blocking_seconds": ckpt_block_s,
+                "ckpt_blocking_reported_s": ckpt_reported_block_s,
                 "metrics": self.metrics_log}
 
     def _latest(self):

@@ -1,0 +1,294 @@
+"""Streaming snapshot pipeline: async semantics, backpressure, config
+hygiene, streaming engine API."""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, EngineConfig, SaveSpec,
+                        TieredTransferEngine, make_cr_engine)
+from repro.core.aggregation import Strategy
+from repro.core.buffers import PAGE, BufferPool, StageBudget
+from repro.core.engines import SaveItem, spec_of
+from repro.core import quant_codec
+
+
+def _state(scale=1):
+    return {
+        "params": {"w": jnp.arange(256 * 256 * scale,
+                                   dtype=jnp.float32).reshape(256, -1),
+                   "b": jnp.full((64,), 0.5, jnp.bfloat16)},
+        "data": {"cursor": np.arange(1024, dtype=np.int64)},  # mutable source
+        "step": 7,
+    }
+
+
+# ------------------------------------------------------------ async semantics
+def test_async_error_surfaces_on_wait(tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, async_save=True) as mgr:
+        def boom(*a, **kw):
+            raise IOError("disk gone")
+        mgr.engine.begin_save = boom
+        mgr.save(1, state)          # returns: submission happened
+        with pytest.raises(RuntimeError, match="async checkpoint flush"):
+            mgr.wait()
+        # error must not be sticky
+        del mgr.engine.begin_save   # restore the class method
+        mgr.save(2, state)
+        mgr.wait()
+        assert mgr.latest_step() == 2
+
+
+def test_async_error_surfaces_on_next_save(tmp_ckpt_dir):
+    state = _state()
+    mgr = CheckpointManager(tmp_ckpt_dir, async_save=True)
+    mgr.engine.begin_save = lambda *a, **kw: (_ for _ in ()).throw(
+        IOError("enospc"))
+    mgr.save(1, state)
+    with pytest.raises(RuntimeError, match="async checkpoint flush"):
+        mgr.save(2, state)          # save() waits on the in-flight pipeline
+    del mgr.engine.begin_save
+    mgr.close()
+
+
+def test_mutation_after_async_save_restores_pre_mutation(tmp_ckpt_dir):
+    """The pipeline snapshot must be stable against caller-side mutation:
+    numpy sources are eagerly copied; JAX sources are immutable refs."""
+    state = _state(scale=4)
+    want_w = np.asarray(state["params"]["w"]).copy()
+    want_cursor = state["data"]["cursor"].copy()
+    with CheckpointManager(tmp_ckpt_dir, async_save=True) as mgr:
+        mgr.save(1, state)
+        # overlap: mutate the numpy leaf IN PLACE and rebind the jax leaf
+        state["data"]["cursor"][:] = -1
+        state["params"]["w"] = state["params"]["w"] * 0.0
+        mgr.wait()
+        r = mgr.restore(step=1)
+    np.testing.assert_array_equal(r["params"]["w"], want_w)
+    np.testing.assert_array_equal(r["data"]["cursor"], want_cursor)
+
+
+def test_wait_snapshotted_allows_donation_style_deletion(tmp_ckpt_dir):
+    """After wait_snapshotted() the pipeline owns every byte: deleting the
+    source arrays (what jit donation does) must not corrupt the save."""
+    state = _state(scale=4)
+    want_w = np.asarray(state["params"]["w"]).copy()
+    with CheckpointManager(tmp_ckpt_dir, async_save=True) as mgr:
+        mgr.save(1, state)
+        mgr.wait_snapshotted()
+        state["params"]["w"].delete()   # simulate buffer donation
+        state.clear()
+        mgr.wait()
+        r = mgr.restore(step=1)
+    np.testing.assert_array_equal(r["params"]["w"], want_w)
+
+
+def test_pipelined_blocking_below_end_to_end(tmp_ckpt_dir):
+    state = _state(scale=8)
+    with CheckpointManager(tmp_ckpt_dir, async_save=True) as mgr:
+        m = mgr.save(1, state)
+        assert m.mode == "pipelined"
+        mgr.wait()
+        assert m.end_to_end_seconds > 0
+        assert m.blocking_seconds <= m.end_to_end_seconds
+
+
+# --------------------------------------------------------------- backpressure
+def test_stream_backpressure_caps_staged_bytes(tmp_path):
+    budget = 2 << 20
+    eng = make_cr_engine("aggregated", EngineConfig(
+        chunk_bytes=1 << 20, coalesce_bytes=1 << 20, inflight_bytes=budget,
+        strategy=Strategy.FILE_PER_PROCESS))
+    rng = np.random.default_rng(1)
+    items = [SaveItem(f"t{i}", rng.integers(0, 256, (1 << 20,), np.uint8),
+                      "uint8", (1 << 20,), ((0, 1 << 20),))
+             for i in range(8)]
+    items.append(SaveItem("big", rng.integers(0, 256, (6 << 20,), np.uint8),
+                          "uint8", (6 << 20,), ((0, 6 << 20),)))
+    eng.save(str(tmp_path / "bp"), items, step=1)
+    s = eng.last_save_stats
+    assert 0 < s.peak_staged_bytes <= budget
+    eng.close()
+
+
+def test_tiered_backpressure_caps_staged_bytes(tmp_path):
+    src = tmp_path / "src"
+    src.mkdir()
+    files = []
+    for i in range(4):
+        p = src / f"f{i}.bin"
+        p.write_bytes(os.urandom(3 << 20))
+        files.append((str(p), str(tmp_path / "dst" / f"f{i}.bin")))
+    budget = 2 << 20
+    eng = TieredTransferEngine("threadpool", chunk_bytes=1 << 20,
+                               inflight_bytes=budget)
+    ts = eng.transfer(files)
+    assert ts.bytes == 4 * (3 << 20)
+    assert 0 < ts.peak_staged_bytes <= budget
+    eng.close()
+    for _src, dst in files:
+        assert os.path.getsize(dst) == 3 << 20
+
+
+def test_pool_acquire_blocks_on_budget():
+    pool = BufferPool()
+    a = pool.acquire(PAGE, budget=2 * PAGE)
+    b = pool.acquire(PAGE, budget=2 * PAGE)
+    with pytest.raises(TimeoutError):
+        pool.acquire(PAGE, budget=2 * PAGE, timeout=0.05)
+    t = threading.Timer(0.05, a.release)
+    t.start()
+    c = pool.acquire(PAGE, budget=2 * PAGE, timeout=5.0)  # unblocked by put
+    t.join()
+    for buf in (b, c):
+        buf.release()
+    assert pool.stats.peak_outstanding_bytes <= 2 * PAGE
+    pool.drain()
+
+
+def test_pool_acquire_oversized_grants_when_idle():
+    pool = BufferPool()
+    buf = pool.acquire(8 * PAGE, budget=PAGE)   # over budget but nothing out
+    buf.release()
+    pool.drain()
+
+
+def test_stage_budget_accounting():
+    b = StageBudget(100)
+    assert b.admits(100) and b.admits(1000)     # empty: always grants
+    b.add(60)
+    assert b.admits(40) and not b.admits(41)
+    b.sub(60)
+    assert b.in_flight == 0 and b.peak == 60
+    assert StageBudget(None).admits(1 << 40)    # unbounded
+
+
+# ------------------------------------------------------------- config hygiene
+def test_engine_config_not_aliased(tmp_path):
+    cfg = EngineConfig()
+    m1 = CheckpointManager(str(tmp_path / "a"), config=cfg, verify_crc=True)
+    m2 = CheckpointManager(str(tmp_path / "b"), config=cfg, verify_crc=False)
+    assert cfg.checksum is False          # caller's object untouched
+    assert cfg.backend == "auto"          # not normalized in place
+    assert m1.config.checksum is True and m2.config.checksum is False
+    m1.close()
+    m2.close()
+
+
+def test_engine_subclasses_do_not_mutate_config():
+    cfg = EngineConfig(direct=True)
+    eng = make_cr_engine("datastates", cfg)
+    assert cfg.direct is True and cfg.strategy is Strategy.SINGLE_FILE
+    assert eng.config.direct is False
+    eng.close()
+
+
+def test_normalized_is_pure():
+    cfg = EngineConfig(backend="auto", strategy="single_file")
+    n = cfg.normalized()
+    assert cfg.backend == "auto" and cfg.strategy == "single_file"
+    assert n.backend in ("uring", "threadpool")
+    assert n.strategy is Strategy.SINGLE_FILE
+
+
+# ------------------------------------------------------- streaming engine API
+@pytest.mark.parametrize("strategy", list(Strategy))
+def test_streaming_api_roundtrip(strategy, tmp_path, rng):
+    from repro.core.engines import ReadReq
+    eng = make_cr_engine("aggregated", EngineConfig(
+        strategy=strategy, chunk_bytes=1 << 20, coalesce_bytes=1 << 21))
+    sizes = [3 << 20, 777, 65536, 0, 4096]
+    items = [SaveItem(f"t{i}", rng.integers(0, 256, (n,), np.uint8)
+                      if n else np.zeros((0,), np.uint8),
+                      "uint8", (n,), ((0, n),)) for i, n in enumerate(sizes)]
+    d = str(tmp_path / "stream")
+    stream = eng.begin_save(d, [spec_of(it) for it in items], step=3)
+    for it in reversed(items):      # any key order is valid
+        stream.put(it.key, it.data)
+    m = stream.end_save()
+    reqs = [ReadReq(k, r.shards[0].path, r.shards[0].offset,
+                    r.shards[0].nbytes) for k, r in m.tensors.items()]
+    out = eng.read(d, reqs)
+    for it in items:
+        assert out[it.key].tobytes() == bytes(memoryview(it.data)), it.key
+    eng.close()
+
+
+def test_streaming_chunked_partial_puts(tmp_path, rng):
+    from repro.core.engines import ReadReq
+    eng = make_cr_engine("aggregated",
+                         EngineConfig(chunk_bytes=1 << 20, align=4096))
+    data = rng.integers(0, 256, (3 << 20,), np.uint8)
+    d = str(tmp_path / "chunked")
+    stream = eng.begin_save(d, [SaveSpec("big", data.nbytes, "uint8",
+                                         (data.nbytes,), ((0, data.nbytes),))])
+    half = 2 << 20                  # align-granular split
+    stream.put("big", data[:half], pos=0)
+    stream.put("big", data[half:], pos=half)
+    m = stream.end_save()
+    sh = m.tensors["big"].shards[0]
+    out = eng.read(d, [ReadReq("big", sh.path, sh.offset, sh.nbytes)])
+    assert out["big"].tobytes() == data.tobytes()
+    eng.close()
+
+
+def test_end_save_with_missing_put_raises(tmp_path):
+    eng = make_cr_engine("aggregated", EngineConfig())
+    stream = eng.begin_save(str(tmp_path / "x"),
+                            [SaveSpec("a", 100, "uint8", (100,), ((0, 100),))])
+    with pytest.raises(RuntimeError, match="unfilled"):
+        stream.end_save()
+    eng.close()
+
+
+# ---------------------------------------------------------------- quant moves
+def test_packed_nbytes_matches_pack():
+    for n in (1, 511, 512, 513, 512 * 8, 512 * 8 + 1, 100_000):
+        arr = np.random.default_rng(n).normal(size=(n,)).astype(np.float32)
+        assert len(quant_codec.pack(arr)) == quant_codec.packed_nbytes(n)
+
+
+def test_quant_pack_runs_off_blocking_path(tmp_ckpt_dir, monkeypatch):
+    """With async_save, pack() must execute on the pipeline worker, not on
+    the caller thread — quantization stays off the training loop."""
+    pack_threads = []
+    real_pack = quant_codec.pack
+
+    def spy(arr):
+        pack_threads.append(threading.current_thread().name)
+        return real_pack(arr)
+
+    monkeypatch.setattr(quant_codec, "pack", spy)
+    state = {"opt": {"mu": jax.random.normal(jax.random.key(0), (512, 512))},
+             "params": {"w": jnp.ones((128,), jnp.float32)}}
+    with CheckpointManager(tmp_ckpt_dir, async_save=True,
+                           quantize_prefixes=("opt/mu",)) as mgr:
+        mgr.save(1, state)
+        mgr.wait()
+        r = mgr.restore(state_template=state)
+    assert pack_threads and all(t.startswith("ckpt-pipeline")
+                                for t in pack_threads)
+    a, b = np.asarray(r["opt"]["mu"]), np.asarray(state["opt"]["mu"])
+    assert np.max(np.abs(a - b)) / np.max(np.abs(b)) < 0.01
+
+
+# ------------------------------------------------------------- mode parity
+@pytest.mark.parametrize("streaming,async_", [(True, False), (True, True),
+                                              (False, True)])
+def test_modes_roundtrip_identically(streaming, async_, tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, async_save=async_,
+                           streaming=streaming) as mgr:
+        mgr.save(1, state)
+        mgr.wait()
+        r = mgr.restore(state_template=state)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    np.testing.assert_array_equal(r["data"]["cursor"],
+                                  state["data"]["cursor"])
