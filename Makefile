@@ -1,13 +1,17 @@
 PY ?= python
 
-.PHONY: verify test bench-smoke
+.PHONY: verify test bench-smoke bench-restore-smoke
 
-# The ROADMAP tier-1 gate plus the save-path smoke benchmark: regressions in
-# either the test suite or pipelined blocking time fail loudly.
-verify: test bench-smoke
+# The ROADMAP tier-1 gate plus the save- and restore-path smoke benchmarks:
+# regressions in the test suite, pipelined blocking time, or streaming
+# restore (wall-clock, staging bound, bit-identity) fail loudly.
+verify: test bench-smoke bench-restore-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_train_overhead --smoke
+
+bench-restore-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_restore_alloc --smoke

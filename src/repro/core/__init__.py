@@ -15,24 +15,27 @@ Layers (bottom-up):
 from .aggregation import ObjectSpec, Strategy, coalesce, plan_layout
 from .buffers import AlignedBuffer, BufferPool, PAGE
 from .checkpoint import CheckpointManager, SaveMetrics, RestoreMetrics
-from .engines import (AggregatedEngine, CREngine, DataStatesEngine,
-                      EngineConfig, ReadReq, SaveItem, SaveSpec, SaveStream,
-                      SnapshotEngine, TorchSaveEngine, make_cr_engine)
+from .engines import (AggregatedEngine, ChecksumError, CREngine,
+                      DataStatesEngine, EngineConfig, ReadReq, ReadStream,
+                      SaveItem, SaveSpec, SaveStream, SnapshotEngine,
+                      TorchSaveEngine, make_cr_engine)
 from .io_engine import (IOEngine, IORequest, PosixEngine, ThreadPoolEngine,
                         UringEngine, make_engine, open_for)
 from .manifest import Manifest, ShardEntry, TensorRecord
 from .multilevel import FlushStats, MultiLevelCheckpointer
-from .pipeline import PendingPut, SnapshotPipeline, build_save_puts
+from .pipeline import (PendingPut, RestorePipeline, RestoreTask,
+                       SnapshotPipeline, build_save_puts)
 from .tiered import RestorePrefetcher, TieredTransferEngine, TransferStats
 from .uring import IoUring, probe_io_uring
 
 __all__ = [
     "AggregatedEngine", "AlignedBuffer", "BufferPool", "CREngine",
-    "CheckpointManager", "DataStatesEngine", "EngineConfig", "FlushStats",
-    "IOEngine", "IORequest", "IoUring", "Manifest", "MultiLevelCheckpointer",
-    "ObjectSpec", "PAGE", "PendingPut", "PosixEngine", "ReadReq",
-    "RestoreMetrics", "RestorePrefetcher", "SaveItem", "SaveMetrics",
-    "SaveSpec", "SaveStream", "ShardEntry", "SnapshotEngine",
+    "CheckpointManager", "ChecksumError", "DataStatesEngine", "EngineConfig",
+    "FlushStats", "IOEngine", "IORequest", "IoUring", "Manifest",
+    "MultiLevelCheckpointer", "ObjectSpec", "PAGE", "PendingPut",
+    "PosixEngine", "ReadReq", "ReadStream", "RestoreMetrics",
+    "RestorePipeline", "RestorePrefetcher", "RestoreTask", "SaveItem",
+    "SaveMetrics", "SaveSpec", "SaveStream", "ShardEntry", "SnapshotEngine",
     "SnapshotPipeline", "Strategy", "TensorRecord", "ThreadPoolEngine",
     "TieredTransferEngine", "TorchSaveEngine", "TransferStats", "UringEngine",
     "build_save_puts", "coalesce", "make_cr_engine", "make_engine",

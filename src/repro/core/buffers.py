@@ -101,10 +101,10 @@ class PoolStats:
 class StageBudget:
     """In-flight staged-byte accounting for streaming transfer loops.
 
-    The snapshot pipeline (engines.aggregated save stream) and the tiered
-    transfer engine both stage data through pooled buffers; this is the shared
-    backpressure primitive that caps how many staged bytes may be in flight at
-    once. ``limit=None`` disables the cap. Not thread-safe by design — each
+    The snapshot pipeline (engines.aggregated save stream), the restore
+    pipeline (its read stream), and the tiered transfer engine all stage data
+    through pooled buffers; this is the shared backpressure primitive that
+    caps how many staged bytes may be in flight at once. ``limit=None`` disables the cap. Not thread-safe by design — each
     user drives its own single-threaded submit/reap loop and consults the
     budget only from that loop (cross-thread blocking waits go through
     ``BufferPool.acquire`` instead).
@@ -129,6 +129,11 @@ class StageBudget:
 
     def sub(self, nbytes: int) -> None:
         self.in_flight -= nbytes
+
+    def settle(self) -> None:
+        """Zero the in-flight books (abort paths: every staged buffer was
+        force-released, so the next loop on this budget must start clean)."""
+        self.in_flight = 0
 
 
 class BufferPool:

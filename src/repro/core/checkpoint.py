@@ -18,6 +18,14 @@ compare the two).
   restore: manifest read → lean object → planned (coalesced) tensor reads
            → host-to-device with target sharding (elastic resharding).
 
+The restore runs as the mirror-image STREAMING pipeline
+(core.pipeline.RestorePipeline, DESIGN.md §10): extents surface from the
+engine's ReadStream as they land and flow through dequantize → window
+assembly → device_put per tensor while later tensors' reads are still in
+flight, with CRCs verified inside the stream and peak host staging bounded
+by ``EngineConfig.inflight_bytes``. ``streaming=False`` keeps the monolithic
+read-everything-then-assemble path for A/B.
+
 Versioned layout::
 
     <root>/step_00000100/manifest.json
@@ -43,9 +51,11 @@ import jax
 import numpy as np
 
 from .aggregation import ObjectSpec, Strategy, rank_padded_total
-from .engines import EngineConfig, ReadReq, SaveItem, make_cr_engine
+from .engines import (ChecksumError, EngineConfig, ReadReq, SaveItem,
+                      make_cr_engine)
 from .manifest import Manifest, crc32_of
-from .pipeline import SnapshotPipeline, build_save_puts, iter_host_shards
+from .pipeline import (RestorePipeline, RestoreTask, SnapshotPipeline,
+                       build_save_puts, iter_host_shards)
 from .resharding import assemble, dedupe_shards, normalize_index, plan_window
 from .serialization import (LEAN_KEY, TensorStub, as_bytes_view,
                             deserialize_lean, extract_tensors, iter_stubs,
@@ -87,12 +97,35 @@ class SaveMetrics:
 
 @dataclass
 class RestoreMetrics:
+    """Per-stage restore attribution.
+
+    Streaming restores OVERLAP the stages, so the per-stage seconds no
+    longer sum to ``end_to_end_seconds`` — ``read_seconds`` is the wall-clock
+    span of the read stage (which runs under everything else), while
+    ``read_stall_seconds`` is the time the consumer actually waited on
+    extents. ``stage_seconds`` and ``overlap_seconds`` report both views.
+    """
     step: int
     total_bytes: int = 0
-    read_seconds: float = 0.0
+    read_seconds: float = 0.0       # wall span of the read stage
+    read_stall_seconds: float = 0.0  # consumer blocked waiting on extents
+    decode_seconds: float = 0.0     # int8 → float dequantization
     assemble_seconds: float = 0.0
     h2d_seconds: float = 0.0
+    prefetch_seconds: float = 0.0   # tier-1 → tier-0 extent staging
     end_to_end_seconds: float = 0.0
+    peak_staged_bytes: int = 0      # max host bytes staged by the read stream
+    mode: str = "monolithic"        # monolithic | streaming
+
+    @property
+    def stage_seconds(self) -> float:
+        """Sum of the stage walls; exceeds end_to_end when stages overlap."""
+        return (self.read_seconds + self.decode_seconds
+                + self.assemble_seconds + self.h2d_seconds)
+
+    @property
+    def overlap_seconds(self) -> float:
+        return max(0.0, self.stage_seconds - self.end_to_end_seconds)
 
 
 class CheckpointManager:
@@ -111,8 +144,10 @@ class CheckpointManager:
         flush volume ~4x — see core.quant_codec).
 
         ``streaming``: route saves through the SnapshotPipeline (D2H, pack,
-        CRC and writes overlap; async saves return after submission).
-        ``streaming=False`` keeps the legacy full-host-copy path.
+        CRC and writes overlap; async saves return after submission) and
+        restores through the RestorePipeline (read, dequant, assembly and
+        H2D overlap; host staging bounded by ``config.inflight_bytes``).
+        ``streaming=False`` keeps the legacy full-copy paths on both sides.
         ``eager_snapshot``: async streaming saves copy ALL sources on the
         blocking path (for callers that donate device buffers before the
         pipeline drains); by default only in-place-mutable numpy sources are
@@ -408,14 +443,16 @@ class CheckpointManager:
     def _restore_from(self, ckpt: str, step: int, state_template, shardings,
                       prefetch, t_start: float):
         manifest = Manifest.load(ckpt)
-        metrics = RestoreMetrics(step=step)
+        metrics = RestoreMetrics(
+            step=step, mode="streaming" if self.streaming else "monolithic")
 
         # lean object first (its stubs define the saved tree)
         lean_rec = manifest.blobs[LEAN_KEY]
         lean_raw = self.engine.read(
             ckpt, [ReadReq(LEAN_KEY, lean_rec.path, lean_rec.offset,
                            lean_rec.nbytes)])[LEAN_KEY]
-        self._check_crc(lean_rec.crc32, lean_raw, LEAN_KEY)
+        self._check_crc(lean_rec.crc32, lean_raw, LEAN_KEY,
+                        lean_rec.path, lean_rec.offset)
         lean_tree = deserialize_lean(lean_raw.tobytes())
 
         # decide the wanted windows per tensor
@@ -429,38 +466,13 @@ class CheckpointManager:
             shard_list = self._target_windows(rec, tmpl, shardings)
             wanted[stub.key] = shard_list
 
-        # plan all reads, deduped by (object, extent), then ONE engine.read call
-        t0 = time.perf_counter()
-        extent_reqs: dict[tuple[str, str, int], ReadReq] = {}
-        for key, windows in wanted.items():
-            rec = _deduped(manifest.tensors[key])
-            for window, _dev in windows:
-                for piece in plan_window(rec, window):
-                    sh = piece.shard
-                    extent_reqs.setdefault(
-                        (key, sh.path, sh.offset),
-                        ReadReq(f"{key}@{sh.path}@{sh.offset}", sh.path,
-                                sh.offset, sh.nbytes, obj=key))
-        if prefetch is not None:   # pull exactly the planned extents
-            prefetch.fetch_extents(ckpt, list(extent_reqs.values()))
-        raw = self.engine.read(ckpt, list(extent_reqs.values()))
-        metrics.read_seconds = time.perf_counter() - t0
-        extent_bytes = {eo: raw[req.key] for eo, req in extent_reqs.items()}
-        if self.verify_crc:
-            self._verify_extents(manifest, extent_bytes)
-
-        # assemble + device placement
-        t0 = time.perf_counter()
         qset = set(manifest.extra.get("quantized", ()))
-        out_tensors: dict[str, object] = {}
-        for stub in iter_stubs(lean_tree):
-            rec = _deduped(manifest.tensors[stub.key])
-            windows = wanted[stub.key]
-            tmpl = template_by_key.get(stub.key)
-            out_tensors[stub.key] = self._materialize(
-                rec, windows, tmpl, extent_bytes, metrics,
-                quantized=stub.key in qset)
-        metrics.assemble_seconds = time.perf_counter() - t0 - metrics.h2d_seconds
+        if self.streaming:
+            out_tensors = self._restore_streaming(
+                ckpt, manifest, lean_tree, wanted, qset, prefetch, metrics)
+        else:
+            out_tensors = self._restore_monolithic(
+                ckpt, manifest, lean_tree, wanted, qset, prefetch, metrics)
 
         metrics.total_bytes = sum(
             s.nbytes for r in manifest.tensors.values() for s in r.shards)
@@ -473,6 +485,84 @@ class CheckpointManager:
         self.last_restore_metrics = metrics
         state = reinsert_tensors(lean_tree, out_tensors)
         return state
+
+    def _restore_streaming(self, ckpt, manifest, lean_tree, wanted, qset,
+                           prefetch, metrics) -> dict[str, object]:
+        """Pipelined restore (DESIGN.md §10): extents stream per tensor
+        through dequant → window assembly → device placement while later
+        tensors' reads are in flight; CRCs verify inside the stream."""
+        tasks = []
+        crcs: dict[str, int] | None = None
+        for stub in iter_stubs(lean_tree):
+            rec = _deduped(manifest.tensors[stub.key])
+            tasks.append(RestoreTask(stub.key, rec, wanted[stub.key],
+                                     quantized=stub.key in qset))
+        if self.verify_crc:
+            crcs = {f"{t.key}@{sh.path}@{sh.offset}": sh.crc32
+                    for t in tasks for sh in t.record.shards
+                    if sh.crc32 is not None}
+        on_reqs = None
+        if prefetch is not None:   # pull exactly the planned extents
+            def on_reqs(reqs):
+                t0 = time.perf_counter()
+                prefetch.fetch_extents(ckpt, reqs)
+                metrics.prefetch_seconds = time.perf_counter() - t0
+        return RestorePipeline(self.engine).run(
+            ckpt, tasks, crcs=crcs, place=self._place, on_reqs=on_reqs,
+            metrics=metrics)
+
+    def _place(self, task: RestoreTask, windows: dict) -> object:
+        """Final leaf from assembled windows (the pipeline's H2D stage)."""
+        if task.windows and task.windows[0][1] is None:
+            return windows[tuple(task.windows[0][0])]
+        sharding = task.windows[0][1][0]
+        arrays = [jax.device_put(windows[tuple(w)], dev)
+                  for w, (_shd, dev) in task.windows]
+        return jax.make_array_from_single_device_arrays(
+            tuple(task.record.global_shape), sharding, arrays)
+
+    def _restore_monolithic(self, ckpt, manifest, lean_tree, wanted, qset,
+                            prefetch, metrics) -> dict[str, object]:
+        """Legacy restore: every extent materialized in host memory (peak =
+        full checkpoint), then verify → assemble → H2D serially. Kept as
+        ``streaming=False`` for A/B benchmarking."""
+        t0 = time.perf_counter()
+        extent_reqs: dict[tuple[str, str, int], ReadReq] = {}
+        for key, windows in wanted.items():
+            rec = _deduped(manifest.tensors[key])
+            for window, _dev in windows:
+                for piece in plan_window(rec, window):
+                    sh = piece.shard
+                    extent_reqs.setdefault(
+                        (key, sh.path, sh.offset),
+                        ReadReq(f"{key}@{sh.path}@{sh.offset}", sh.path,
+                                sh.offset, sh.nbytes, obj=key))
+        if prefetch is not None:   # pull exactly the planned extents
+            tp = time.perf_counter()
+            prefetch.fetch_extents(ckpt, list(extent_reqs.values()))
+            metrics.prefetch_seconds = time.perf_counter() - tp
+            t0 = time.perf_counter()
+        raw = self.engine.read(ckpt, list(extent_reqs.values()))
+        metrics.read_seconds = time.perf_counter() - t0
+        metrics.read_stall_seconds = metrics.read_seconds
+        metrics.peak_staged_bytes = sum(
+            req.nbytes for req in extent_reqs.values())
+        extent_bytes = {eo: raw[req.key] for eo, req in extent_reqs.items()}
+        if self.verify_crc:
+            self._verify_extents(manifest, extent_bytes)
+
+        # assemble + device placement
+        t0 = time.perf_counter()
+        out_tensors: dict[str, object] = {}
+        for stub in iter_stubs(lean_tree):
+            rec = _deduped(manifest.tensors[stub.key])
+            out_tensors[stub.key] = self._materialize(
+                rec, wanted[stub.key], extent_bytes, metrics,
+                quantized=stub.key in qset)
+        metrics.assemble_seconds = (time.perf_counter() - t0
+                                    - metrics.h2d_seconds
+                                    - metrics.decode_seconds)
+        return out_tensors
 
     # ------------------------------------------------------------- internals
     @staticmethod
@@ -509,7 +599,7 @@ class CheckpointManager:
                             (sharding, dev)))
         return windows
 
-    def _materialize(self, rec, windows, tmpl, extent_bytes, metrics,
+    def _materialize(self, rec, windows, extent_bytes, metrics,
                      quantized: bool = False):
         if quantized:
             from . import quant_codec
@@ -519,7 +609,9 @@ class CheckpointManager:
             def lookup(sh):
                 k = (rec.key, sh.path, sh.offset)
                 if k not in cache:
+                    td = time.perf_counter()
                     cache[k] = quant_codec.unpack(extent_bytes[k], dt)
+                    metrics.decode_seconds += time.perf_counter() - td
                 return cache[k]
         else:
             lookup = lambda sh: extent_bytes[(rec.key, sh.path, sh.offset)]
@@ -541,11 +633,12 @@ class CheckpointManager:
         metrics.h2d_seconds += time.perf_counter() - t0
         return out
 
-    def _check_crc(self, expect, raw, key) -> None:
+    def _check_crc(self, expect, raw, key, path: str = "",
+                   offset: int = 0) -> None:
         if self.verify_crc and expect is not None:
             got = crc32_of(raw)
             if got != expect:
-                raise IOError(f"CRC mismatch for {key}: {got:#x} != {expect:#x}")
+                raise ChecksumError(key, path, offset, expect, got)
 
     def _verify_extents(self, manifest, extent_bytes) -> None:
         by_extent = {}
@@ -554,7 +647,7 @@ class CheckpointManager:
                 by_extent[(rec.key, sh.path, sh.offset)] = (sh.crc32, rec.key)
         for eo, raw in extent_bytes.items():
             expect, key = by_extent.get(eo, (None, None))
-            self._check_crc(expect, raw, key)
+            self._check_crc(expect, raw, key, eo[1], eo[2])
 
     @staticmethod
     def _fsync_dir(path: str) -> None:

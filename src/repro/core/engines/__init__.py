@@ -8,8 +8,8 @@
 - ``torchsave``   — torch.save-faithful: monolithic pickle, sequential write.
 """
 
-from .base import (CREngine, EngineConfig, IOStats, ReadReq, SaveItem,
-                   SaveSpec, SaveStream, spec_of)
+from .base import (ChecksumError, CREngine, EngineConfig, IOStats, ReadReq,
+                   ReadStream, SaveItem, SaveSpec, SaveStream, spec_of)
 from .aggregated import AggregatedEngine
 from .datastates import DataStatesEngine
 from .snapshot import SnapshotEngine
@@ -27,7 +27,7 @@ def make_cr_engine(name: str, config: EngineConfig | None = None,
                    pool=None) -> CREngine:
     return ENGINES[name](config, pool)
 
-__all__ = ["CREngine", "EngineConfig", "IOStats", "ReadReq", "SaveItem",
-           "SaveSpec", "SaveStream", "spec_of",
+__all__ = ["ChecksumError", "CREngine", "EngineConfig", "IOStats", "ReadReq",
+           "ReadStream", "SaveItem", "SaveSpec", "SaveStream", "spec_of",
            "AggregatedEngine", "DataStatesEngine", "SnapshotEngine",
            "TorchSaveEngine", "ENGINES", "make_cr_engine"]

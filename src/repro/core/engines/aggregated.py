@@ -15,16 +15,26 @@ client that puts every item and drains):
   · O_DIRECT by default (4.8× write uplift in the paper), deep submission
     queues, batched io_uring submission, optional registered buffers.
 
-Restore path (paper Observation 3):
+Restore path (paper Observation 3), exposed as a STREAM
+(``begin_restore`` / ``get`` / ``end_restore``; batch ``read`` is a
+degenerate client that gets every request and drains):
   · coalesced reads — one I/O per group region covering many small objects,
   · preallocated POOLED buffers (the fix for DataStates' dominant
-    allocation cost), O_DIRECT reads for large transfers.
+    allocation cost), O_DIRECT reads for large transfers,
+  · per-request results surface the moment their extents land, so the
+    consumer dequantizes/assembles/uploads tensor k while the reads for
+    tensor k+1 are still in flight,
+  · staged bytes in flight (read buffers + landed-but-unconsumed results)
+    are bounded by ``config.inflight_bytes`` (StageBudget backpressure),
+  · CRCs are verified incrementally against the manifest as extents land
+    (``ChecksumError`` names the key and file offset).
 """
 
 from __future__ import annotations
 
 import time
 import zlib
+from collections import deque
 
 import numpy as np
 
@@ -32,8 +42,8 @@ from ..aggregation import Extent, coalesce
 from ..buffers import BufferPool, StageBudget, align_up
 from ..io_engine import IORequest, OP_READ, OP_WRITE
 from ..manifest import Manifest
-from .base import (CREngine, IOStats, ReadReq, SaveItem, SaveSpec, SaveStream,
-                   as_u8, spec_of)
+from .base import (ChecksumError, CREngine, IOStats, ReadReq, ReadStream,
+                   SaveItem, SaveSpec, SaveStream, as_u8, spec_of)
 
 
 class _Group:
@@ -241,9 +251,277 @@ class _AggSaveStream(SaveStream):
                     g.buf = None
 
 
+class _ReadUnit:
+    """One submission-granular read: a coalesced group region, or one chunk
+    of an extent larger than the (budget-clamped) chunk size."""
+
+    __slots__ = ("path", "file_off", "span", "group", "key", "pos", "n")
+
+    def __init__(self, path: str, file_off: int, span: int, *,
+                 group: list[Extent] | None = None, key: str | None = None,
+                 pos: int = 0, n: int = 0):
+        self.path, self.file_off, self.span = path, file_off, span
+        self.group = group          # members of a coalesced group, else None
+        self.key, self.pos, self.n = key, pos, n   # chunk of a large extent
+
+
+class _AggReadStream(ReadStream):
+    """Streaming reader against the io_engine request stream.
+
+    All requests are planned (coalesced, chunked) up front and submitted in
+    layout order as the staged-byte budget admits them; ``get`` surfaces each
+    request's bytes the moment its extents have landed, so the consumer's
+    decode/assemble/H2D overlaps the reads still in flight. The budget counts
+    read buffers in flight AND landed-but-unconsumed coalesced-group results,
+    so a slow consumer throttles submission instead of ballooning host
+    memory. (A chunked large extent's destination array is consumer-owned
+    output — the result the ``get`` will hand over — and is not charged, the
+    same way the save stream never charges its caller's source arrays.)
+    """
+
+    def __init__(self, eng: "AggregatedEngine", ckpt_dir: str,
+                 reqs: list[ReadReq], crcs: dict[str, int] | None):
+        self.eng = eng
+        self.cfg = cfg = eng.config
+        self.stats = IOStats()
+        self.t0 = time.perf_counter()
+        self.extents: dict[str, Extent] = {}
+        for r in reqs:
+            if r.key in self.extents:
+                raise ValueError(f"duplicate read request key {r.key!r}")
+            self.extents[r.key] = Extent(r.key, r.path, r.offset, r.nbytes)
+        self.crcs = dict(crcs or {}) if cfg.checksum else {}
+        self.budget = StageBudget(cfg.inflight_bytes)
+        # clamp staging units to half the budget (same rule as the save
+        # stream) so an in-order consumer is never wedged by a single unit
+        self._chunk = cfg.chunk_bytes
+        thr = cfg.coalesce_bytes
+        if cfg.inflight_bytes is not None:
+            half = max(cfg.inflight_bytes // 2, 1)
+            unit = max(cfg.align, 1 << (half.bit_length() - 1))  # floor pow2
+            self._chunk = min(self._chunk, unit)
+            thr = min(thr, unit)
+        self._units: deque[_ReadUnit] = deque()
+        self._unsubmitted: dict[str, int] = {}   # key -> units still queued
+        self._dest: dict[str, np.ndarray] = {}   # chunked keys being filled
+        self._left: dict[str, int] = {}          # chunked: bytes not landed
+        self._crc_state: dict[str, list] = {}    # key -> [crc, pos, {pos: n}]
+        self._done: dict[str, np.ndarray] = {}   # landed, awaiting get()
+        self._staged_done: dict[str, int] = {}   # done bytes held in budget
+        self._consumed: set[str] = set()
+        self._handlers: dict[int, tuple] = {}    # token -> (buf, unit)
+        self._token = 0
+        for group in coalesce(list(self.extents.values()), thr, cfg.align):
+            first, last = group[0], group[-1]
+            if len(group) == 1 and first.nbytes > self._chunk:
+                pos, n_units = 0, 0
+                while pos < first.nbytes:
+                    n = min(self._chunk, first.nbytes - pos)
+                    self._units.append(_ReadUnit(
+                        first.path, first.offset + pos,
+                        align_up(n, cfg.align), key=first.key, pos=pos, n=n))
+                    pos += n
+                    n_units += 1
+                self._unsubmitted[first.key] = n_units
+                self._left[first.key] = first.nbytes
+            else:
+                span = (last.offset + align_up(last.nbytes, cfg.align)
+                        - first.offset)
+                self._units.append(
+                    _ReadUnit(first.path, first.offset, span, group=group))
+                for e in group:
+                    self._unsubmitted[e.key] = 1
+        self._state = "open"            # open → ended | aborted
+        self.io = None
+        self.fds = eng._open_files(
+            ckpt_dir, {e.path for e in self.extents.values()}, "r")
+        try:
+            self.stats.files = len(self.fds)
+            self.io = eng._make_io()
+            self._submit_admitted(None)  # prime: reads overlap caller's work
+        except BaseException:
+            # begin_restore never returned, so no caller can abort(): free
+            # everything here or the fds/backend/buffers leak for good
+            self.abort()
+            raise
+
+    # ------------------------------------------------------------- plumbing
+    def _submit_admitted(self, wait_for: str | None,
+                         drain: bool = False) -> None:
+        """Submit queued units while the queue depth and budget admit more.
+
+        When the budget is held by landed-but-unconsumed results and no read
+        is in flight, an out-of-order consumer (or the ``end_restore`` drain
+        of a stream whose keys were never all consumed) would deadlock —
+        exceed the budget one unit at a time until ``wait_for``'s units are
+        submitted / the queue empties (the documented over-budget escape
+        hatch)."""
+        while self._units and self.io.inflight < self.cfg.queue_depth:
+            unit = self._units[0]
+            if not self.budget.admits(
+                    BufferPool.size_class(max(unit.span, 1))):
+                if self.io.inflight or not (
+                        drain or (wait_for is not None
+                                  and wait_for not in self._done
+                                  and self._unsubmitted.get(wait_for))):
+                    break
+            self._units.popleft()
+            self._submit(unit)
+
+    def _submit(self, unit: _ReadUnit) -> None:
+        ta = time.perf_counter()
+        buf = self.eng.pool.get(unit.span)
+        self.stats.alloc_seconds += time.perf_counter() - ta
+        self.budget.add(buf.nbytes)
+        self._token += 1
+        self._handlers[self._token] = (buf, unit)
+        self.io.submit([IORequest(OP_READ, self.fds[unit.path], unit.file_off,
+                                  buf, 0, unit.span, user_data=self._token)])
+        self.stats.io_requests += 1
+        if unit.group is not None:
+            for e in unit.group:
+                self._unsubmitted[e.key] -= 1
+        else:
+            self._unsubmitted[unit.key] -= 1
+
+    def _pump(self, wait_for: str | None = None, drain: bool = False) -> None:
+        self._submit_admitted(wait_for, drain)
+        if self.io.inflight:
+            cs = self.io.poll(min_n=1)
+        else:
+            cs = self.io.poll()   # drain engines that complete inline (posix)
+        for c in cs:
+            self._complete(c)
+
+    def _complete(self, c) -> None:
+        buf, unit = self._handlers.pop(c.user_data)
+        tb = time.perf_counter()
+        if unit.group is not None:
+            first = unit.group[0]
+            landed = 0
+            for e in unit.group:
+                arr = np.empty(e.nbytes, dtype=np.uint8)
+                arr[:] = np.frombuffer(
+                    buf.view(e.offset - first.offset, e.nbytes), np.uint8)
+                self._done[e.key] = arr
+                self._staged_done[e.key] = e.nbytes
+                landed += e.nbytes
+            self.budget.sub(buf.nbytes)
+            buf.release()
+            self.budget.add(landed)
+            self.stats.copy_seconds += time.perf_counter() - tb
+            for e in unit.group:     # verify AFTER the books are settled
+                self._verify_whole(e)
+        else:
+            e = self.extents[unit.key]
+            dest = self._dest.get(unit.key)
+            if dest is None:
+                dest = self._dest[unit.key] = np.empty(e.nbytes, np.uint8)
+            dest[unit.pos:unit.pos + unit.n] = np.frombuffer(
+                buf.view(0, unit.n), np.uint8)
+            self.budget.sub(buf.nbytes)
+            buf.release()
+            self._left[unit.key] -= unit.n
+            if self._left[unit.key] == 0:
+                self._done[unit.key] = self._dest.pop(unit.key)
+            self.stats.copy_seconds += time.perf_counter() - tb
+            self._advance_crc(e, dest, unit.pos, unit.n)
+
+    # ------------------------------------------------------ CRC verification
+    def _verify_whole(self, e: Extent) -> None:
+        expect = self.crcs.get(e.key)
+        if expect is None:
+            return
+        got = zlib.crc32(self._done[e.key]) & 0xFFFFFFFF
+        if got != expect:
+            raise ChecksumError(e.key, e.path, e.offset, expect, got)
+
+    def _advance_crc(self, e: Extent, dest: np.ndarray, pos: int,
+                     n: int) -> None:
+        """Chunks may land out of order; the CRC rolls forward over the
+        contiguous prefix as arrivals extend it."""
+        expect = self.crcs.get(e.key)
+        if expect is None:
+            return
+        st = self._crc_state.setdefault(e.key, [0, 0, {}])
+        st[2][pos] = n
+        while st[1] in st[2]:
+            m = st[2].pop(st[1])
+            st[0] = zlib.crc32(dest[st[1]:st[1] + m], st[0]) & 0xFFFFFFFF
+            st[1] += m
+        if st[1] == e.nbytes and st[0] != expect:
+            raise ChecksumError(e.key, e.path, e.offset, expect, st[0])
+
+    # ------------------------------------------------------------------ API
+    def get(self, key: str) -> np.ndarray:
+        if self._state != "open":
+            raise RuntimeError(f"get() on a {self._state} read stream")
+        if key in self._consumed:
+            raise KeyError(f"read request {key!r} already consumed")
+        if key not in self.extents:
+            raise KeyError(key)
+        t0 = time.perf_counter()
+        while key not in self._done:
+            self._pump(wait_for=key)
+        self.stats.io_seconds += time.perf_counter() - t0  # blocked-on-read
+        arr = self._done.pop(key)
+        self._consumed.add(key)
+        self.budget.sub(self._staged_done.pop(key, 0))
+        return arr
+
+    def end_restore(self) -> IOStats:
+        if self._state != "open":
+            raise RuntimeError("end_restore() called twice" if
+                               self._state == "ended" else
+                               "end_restore() after abort()")
+        while self._units or self._handlers:
+            self._pump(drain=True)
+        self._state = "ended"
+        self.io.close()
+        self.eng._close_files(self.fds)
+        self.stats.logical_bytes = sum(
+            e.nbytes for e in self.extents.values())
+        self.stats.peak_staged_bytes = self.budget.peak
+        self.stats.seconds = time.perf_counter() - self.t0
+        self.eng.last_restore_stats = self.stats
+        return self.stats
+
+    def abort(self) -> None:
+        if self._state != "open":
+            return
+        self._state = "aborted"
+        try:
+            try:
+                while self.io is not None and self.io.inflight:
+                    for c in self.io.poll(min_n=1):
+                        buf, _u = self._handlers.pop(c.user_data,
+                                                     (None, None))
+                        if buf is not None:
+                            buf.release()
+                if self.io is not None:
+                    for c in self.io.poll():
+                        buf, _u = self._handlers.pop(c.user_data,
+                                                     (None, None))
+                        if buf is not None:
+                            buf.release()
+            except BaseException:
+                pass   # inflight state unknown; handlers below still released
+            if self.io is not None:
+                self.io.close()
+        finally:
+            self.eng._close_files(self.fds)
+            for buf, _u in self._handlers.values():
+                buf.release()
+            self._handlers.clear()
+            self._done.clear()
+            self._dest.clear()
+            self.budget.settle()
+
+
 class AggregatedEngine(CREngine):
     name = "aggregated"
     supports_streaming = True
+    supports_streaming_read = True
 
     # ------------------------------------------------------------------ save
     def begin_save(self, ckpt_dir: str, specs: list[SaveSpec], *,
@@ -267,78 +545,16 @@ class AggregatedEngine(CREngine):
             raise
 
     # ------------------------------------------------------------------ read
+    def begin_restore(self, ckpt_dir: str, reqs: list[ReadReq], *,
+                      crcs: dict[str, int] | None = None) -> ReadStream:
+        return _AggReadStream(self, ckpt_dir, reqs, crcs)
+
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
-        cfg = self.config
-        t0 = time.perf_counter()
-        stats = IOStats()
-        out: dict[str, np.ndarray] = {}
-        extents = [Extent(r.key, r.path, r.offset, r.nbytes) for r in reqs]
-        groups = coalesce(extents, cfg.coalesce_bytes, cfg.align)
-        fds = self._open_files(ckpt_dir, {r.path for r in reqs}, "r")
-        stats.files = len(fds)
-        io = self._make_io()
-        handlers: dict[int, tuple] = {}  # token -> (buf, on_done)
-        token = 0
-
-        def reap(block_min: int):
-            for c in io.poll(min_n=block_min):
-                buf, on_done = handlers.pop(c.user_data)
-                tb = time.perf_counter()
-                on_done(buf)
-                stats.copy_seconds += time.perf_counter() - tb
-                buf.release()
-
-        def submit_read(fd: int, file_off: int, span: int, on_done):
-            nonlocal token
-            ta = time.perf_counter()
-            buf = self.pool.get(span)
-            stats.alloc_seconds += time.perf_counter() - ta
-            token += 1
-            handlers[token] = (buf, on_done)
-            io.submit([IORequest(OP_READ, fd, file_off, buf, 0, span,
-                                 user_data=token)])
-            stats.io_requests += 1
-            while io.inflight >= cfg.queue_depth:
-                reap(1)
-
+        stream = self.begin_restore(ckpt_dir, reqs)
         try:
-            for group in groups:
-                first, last = group[0], group[-1]
-                if len(group) == 1 and first.nbytes > cfg.chunk_bytes:
-                    # Large object: chunked pipelined reads into one dest array.
-                    dest = np.empty(first.nbytes, dtype=np.uint8)
-                    out[first.key] = dest
-                    pos = 0
-                    while pos < first.nbytes:
-                        n = min(cfg.chunk_bytes, first.nbytes - pos)
-
-                        def done(buf, dest=dest, pos=pos, n=n):
-                            dest[pos:pos + n] = np.frombuffer(
-                                buf.view(0, n), np.uint8)
-
-                        submit_read(fds[first.path], first.offset + pos,
-                                    align_up(n, cfg.align), done)
-                        pos += n
-                else:
-                    span = (last.offset + align_up(last.nbytes, cfg.align)
-                            - first.offset)
-
-                    def done(buf, group=group, first=first):
-                        for e in group:
-                            arr = np.empty(e.nbytes, dtype=np.uint8)
-                            arr[:] = np.frombuffer(
-                                buf.view(e.offset - first.offset, e.nbytes),
-                                np.uint8)
-                            out[e.key] = arr
-
-                    submit_read(fds[first.path], first.offset, span, done)
-            while io.inflight:
-                reap(1)
-            reap(0)   # drain engines that complete inline (posix)
-        finally:
-            io.close()
-            self._close_files(fds)
-        stats.logical_bytes = sum(r.nbytes for r in reqs)
-        stats.seconds = time.perf_counter() - t0
-        self.last_restore_stats = stats
-        return out
+            out = {r.key: stream.get(r.key) for r in reqs}
+            stream.end_restore()
+            return out
+        except BaseException:
+            stream.abort()
+            raise

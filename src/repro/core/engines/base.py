@@ -83,6 +83,21 @@ class ReadReq:
     obj: str | None = None
 
 
+class ChecksumError(IOError):
+    """Restored bytes did not match the CRC the manifest recorded at save."""
+
+    def __init__(self, key: str, path: str, offset: int,
+                 expect: int, got: int):
+        super().__init__(
+            f"CRC mismatch restoring {key!r} ({path} @ byte {offset}): "
+            f"got {got:#010x}, manifest says {expect:#010x}")
+        self.key = key
+        self.path = path
+        self.offset = offset
+        self.expect = expect
+        self.got = got
+
+
 @dataclass
 class IOStats:
     seconds: float = 0.0
@@ -212,11 +227,84 @@ class _BufferedSaveStream(SaveStream):
         self._parts.clear()
 
 
+class ReadStream:
+    """One in-progress streaming restore (returned by ``CREngine.begin_restore``).
+
+    Contract: every ``ReadReq`` declared at ``begin_restore`` may be fetched
+    exactly once via ``get``; all calls come from one thread (the restore
+    pipeline's consumer loop). ``get`` blocks only until *that* request's
+    bytes have landed — requests behind it stay in flight, so decode/assemble
+    /H2D of tensor k overlaps the reads of tensor k+1. Keys should be
+    consumed roughly in declaration (= layout) order: the stream's staged-byte
+    budget admits new reads as earlier results are drained, and an
+    out-of-order ``get`` may have to exceed the budget by one unit to
+    guarantee progress."""
+
+    def get(self, key: str) -> np.ndarray:
+        raise NotImplementedError
+
+    def end_restore(self) -> IOStats:
+        """Drain remaining I/O, close resources, return the restore stats
+        (also published as ``engine.last_restore_stats``)."""
+        raise NotImplementedError
+
+    def abort(self) -> None:
+        """Tear down after a failure: release every pooled buffer and settle
+        the staged-byte books so the engine is reusable. Safe to call after
+        end_restore (no-op)."""
+
+
+class _BufferedReadStream(ReadStream):
+    """Batch adapter: engines without a native streaming read run one batch
+    ``read`` up front — same data path and stats as before, no overlap —
+    then serve ``get`` from the result, validating CRCs per request."""
+
+    def __init__(self, engine: "CREngine", ckpt_dir: str,
+                 reqs: list[ReadReq], crcs: dict[str, int] | None):
+        self.engine = engine
+        self.reqs = {r.key: r for r in reqs}
+        self.crcs = dict(crcs or {}) if engine.config.checksum else {}
+        self._out = engine.read(ckpt_dir, reqs)
+        # the batch read staged every request in host memory at once — make
+        # the stats say so (the stream path reports its bounded peak here)
+        stats = engine.last_restore_stats
+        stats.peak_staged_bytes = max(stats.peak_staged_bytes,
+                                      sum(r.nbytes for r in reqs))
+        self._state = "open"            # open → ended | aborted
+
+    def get(self, key: str) -> np.ndarray:
+        if self._state != "open":
+            raise RuntimeError(f"get() on a {self._state} read stream")
+        raw = self._out.pop(key)        # KeyError on unknown/repeated key
+        expect = self.crcs.get(key)
+        if expect is not None:
+            got = crc32_of(raw)
+            if got != expect:
+                r = self.reqs[key]
+                raise ChecksumError(key, r.path, r.offset, expect, got)
+        return raw
+
+    def end_restore(self) -> IOStats:
+        if self._state != "open":
+            raise RuntimeError("end_restore() called twice" if
+                               self._state == "ended" else
+                               "end_restore() after abort()")
+        self._state = "ended"
+        self._out.clear()
+        return self.engine.last_restore_stats
+
+    def abort(self) -> None:
+        if self._state == "open":
+            self._state = "aborted"
+        self._out.clear()
+
+
 class CREngine:
     """Base class. Subclasses set ``name`` and override save/restore."""
 
     name = "base"
     supports_streaming = False   # True: begin_save overlaps staging & flush
+    supports_streaming_read = False  # True: begin_restore overlaps read/consume
 
     def __init__(self, config: EngineConfig | None = None,
                  pool: BufferPool | None = None):
@@ -243,6 +331,15 @@ class CREngine:
 
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
         raise NotImplementedError
+
+    def begin_restore(self, ckpt_dir: str, reqs: list[ReadReq], *,
+                      crcs: dict[str, int] | None = None) -> ReadStream:
+        """Open a streaming restore over ``reqs``. Engines with
+        ``supports_streaming_read`` surface each request's bytes as its
+        extents land, verifying CRCs incrementally (``crcs`` maps request
+        key → expected crc32; checked only when ``config.checksum`` is set).
+        This base fallback runs one batch ``read`` and validates per get."""
+        return _BufferedReadStream(self, ckpt_dir, reqs, crcs)
 
     def close(self) -> None:
         self.pool.drain()

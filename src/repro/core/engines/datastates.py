@@ -10,7 +10,9 @@ Matches the behaviours the paper attributes to DataStates-LLM:
   · buffered I/O (no O_DIRECT in its flush path),
   · restore issues a separate read *for every entry referenced in the
     metadata header* and allocates host memory for each read on the fly
-    (paper Fig 13: allocation dominates restore).
+    (paper Fig 13: allocation dominates restore). No native read stream:
+    ``begin_restore`` is the validating buffered fallback (one batch read,
+    CRC check per get, no read/consume overlap — DESIGN.md §10.3).
 
 The deltas to AggregatedEngine are exactly the paper's findings; everything
 else (ring, manifest) is shared, so benchmark gaps isolate the design axes.

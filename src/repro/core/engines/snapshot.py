@@ -12,7 +12,9 @@ Modeled faithfully:
     per-object granularity, no cross-object coalescing,
   · restore is SERIAL per logical object: all chunks of object k are read and
     assembled before object k+1 starts (paper: "all checkpoint engines restore
-    the M logical objects serially"), with dynamic allocation per read.
+    the M logical objects serially"), with dynamic allocation per read. No
+    native read stream: ``begin_restore`` is the validating buffered fallback
+    (DESIGN.md §10.3).
 """
 
 from __future__ import annotations

@@ -7,7 +7,8 @@ logical object, and finally flush to disk."
 Faithfully modeled: every tensor is *pickled* (full serialization cost, no
 pre-serialized fast path), the pickle stream is written sequentially through
 buffered POSIX I/O as one monolithic file per rank, then fsync'd. Restore
-reads + unpickles the whole object even if one tensor is wanted.
+reads + unpickles the whole object even if one tensor is wanted; its
+``begin_restore`` is the validating buffered fallback (DESIGN.md §10.3).
 """
 
 from __future__ import annotations

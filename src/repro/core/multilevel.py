@@ -225,6 +225,12 @@ class MultiLevelCheckpointer:
                 out.append(int(name.split("_")[1]))
         return sorted(out)
 
+    @property
+    def last_restore_metrics(self):
+        """Restore attribution of the local manager (restores always run
+        there — level-1-only steps are prefetched into it first)."""
+        return self.local.last_restore_metrics
+
     def wait_snapshotted(self) -> None:
         """Barrier on the local manager's staged snapshot (see
         CheckpointManager.wait_snapshotted); the level-1 flush keeps going."""

@@ -1,4 +1,5 @@
-"""SnapshotPipeline — the streaming save path (snapshot ∥ stage ∥ flush).
+"""Streaming checkpoint pipelines: SnapshotPipeline (save, DESIGN.md §9)
+and RestorePipeline (load, DESIGN.md §10).
 
 The legacy save materialized a full host copy of EVERY shard — plus inline
 int8 quant-packing — on the blocking path before the first byte hit storage,
@@ -26,19 +27,30 @@ snapshot by construction. In-place-mutable sources (``np.ndarray``) are
 eagerly copied on the blocking path when ``copy_mutable`` is set (async
 saves); ``copy_all`` additionally copies device arrays for callers that will
 donate their buffers before the pipeline drains.
+
+``RestorePipeline`` is the load-path twin: the monolithic restore
+materialized EVERY extent in host memory before the first ``device_put``, so
+restore wall-clock was read + decode + assemble + H2D summed and peak host
+memory was the full checkpoint. The pipeline instead consumes a streaming
+``ReadStream`` (``CREngine.begin_restore``): as each tensor's extents land
+they are dequantized, fed to incremental ``WindowAssembler``s, and placed on
+device while the reads for later tensors are still in flight — peak host
+staging stays bounded by ``EngineConfig.inflight_bytes``.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
+from types import SimpleNamespace
 from typing import Callable
 
 import jax
 import numpy as np
 
-from .engines import SaveSpec
-from .manifest import Manifest
-from .resharding import normalize_index
+from .engines import ReadReq, SaveSpec
+from .manifest import Manifest, TensorRecord
+from .resharding import WindowAssembler, normalize_index, record_dtype
 from .serialization import (LEAN_KEY, as_bytes_view, tensor_nbytes,
                             to_numpy_view)
 
@@ -140,5 +152,120 @@ class SnapshotPipeline:
                 on_staged()
             return stream.end_save()
         except BaseException:
+            stream.abort()
+            raise
+
+
+@dataclass
+class RestoreTask:
+    """One tensor to materialize from the read stream.
+
+    ``windows`` lists the (window, placement) pairs this process must build;
+    placement is opaque to the pipeline — it is handed back to the caller's
+    ``place`` callable (the CheckpointManager puts shards on devices there).
+    """
+    key: str
+    record: TensorRecord            # shards already deduped (DP replicas)
+    windows: list[tuple] = field(default_factory=list)
+    quantized: bool = False
+
+
+def _extent_req_key(task_key: str, path: str, offset: int) -> str:
+    return f"{task_key}@{path}@{offset}"
+
+
+class RestorePipeline:
+    """Drives RestoreTasks through an engine's streaming read.
+
+    With a ``supports_streaming_read`` engine (aggregated), the four restore
+    stages overlap per tensor: while the io backend reads the extents of
+    tensor k+1, the consumer thread dequantizes, window-assembles, and
+    ``device_put``s tensor k. Engines without a native stream degrade to the
+    buffered batch path behind the same API (decode/assemble/H2D still
+    pipeline against each other, reads do not).
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def run(self, ckpt_dir: str, tasks: list[RestoreTask], *,
+            crcs: dict[str, int] | None = None,
+            place: Callable | None = None,
+            on_reqs: Callable | None = None,
+            metrics=None) -> dict[str, object]:
+        """Materialize every task; returns ``{task.key: leaf}``.
+
+        ``place(task, windows)`` turns the assembled ``{window: ndarray}``
+        dict into the final leaf (device placement); ``on_reqs(reqs)`` fires
+        with the planned extent reads before the stream opens (the restore
+        prefetcher pulls exactly these from the remote tier); ``crcs`` maps
+        request keys to expected crc32s for in-stream verification.
+        ``metrics`` (RestoreMetrics-shaped) gains stall/decode/assemble/h2d
+        seconds and the engine's peak staged bytes."""
+        from . import quant_codec
+        if place is None:
+            place = lambda task, windows: next(iter(windows.values()))
+        if metrics is None:
+            metrics = SimpleNamespace(
+                read_seconds=0.0, read_stall_seconds=0.0, decode_seconds=0.0,
+                assemble_seconds=0.0, h2d_seconds=0.0, peak_staged_bytes=0)
+
+        # Plan: per task, one assembler per distinct window and the ordered
+        # set of extents feeding them (a resharded restore reads a subset of
+        # the saved shards — only intersecting extents are requested).
+        plans = []
+        for task in tasks:
+            asms: dict[tuple, WindowAssembler] = {}
+            for window, _placement in task.windows:
+                wkey = tuple(window)
+                if wkey not in asms:
+                    asms[wkey] = WindowAssembler(task.record, window)
+            extents = {}
+            for asm in asms.values():
+                for sh in asm.pending_shards():
+                    extents[(sh.path, sh.offset)] = sh
+            ordered = [extents[k] for k in sorted(extents)]
+            plans.append((task, asms, ordered))
+        # consume in layout order so the stream's staged-byte budget admits
+        # reads exactly as earlier results drain (no over-budget escapes)
+        plans.sort(key=lambda p: ((p[2][0].path, p[2][0].offset)
+                                  if p[2] else ("", -1)))
+        reqs = [ReadReq(_extent_req_key(task.key, sh.path, sh.offset),
+                        sh.path, sh.offset, sh.nbytes, obj=task.key)
+                for task, _asms, ordered in plans for sh in ordered]
+        if on_reqs is not None:
+            on_reqs(reqs)
+
+        stream = self.engine.begin_restore(ckpt_dir, reqs, crcs=crcs)
+        out: dict[str, object] = {}
+        try:
+            for task, asms, ordered in plans:
+                for sh in ordered:
+                    t0 = time.perf_counter()
+                    raw = stream.get(
+                        _extent_req_key(task.key, sh.path, sh.offset))
+                    t1 = time.perf_counter()
+                    metrics.read_stall_seconds += t1 - t0
+                    if task.quantized:
+                        raw = quant_codec.unpack(raw,
+                                                 record_dtype(task.record))
+                        t2 = time.perf_counter()
+                        metrics.decode_seconds += t2 - t1
+                    else:
+                        t2 = t1
+                    for asm in asms.values():
+                        asm.feed(sh, raw)
+                    metrics.assemble_seconds += time.perf_counter() - t2
+                windows = {wkey: asm.result() for wkey, asm in asms.items()}
+                t3 = time.perf_counter()
+                out[task.key] = place(task, windows)
+                metrics.h2d_seconds += time.perf_counter() - t3
+            stats = stream.end_restore()
+            metrics.read_seconds = stats.seconds
+            metrics.peak_staged_bytes = stats.peak_staged_bytes
+            return out
+        except BaseException:
+            # abort releases pooled buffers and settles the staged-byte
+            # books — a failed restore must not wedge the engine
             stream.abort()
             raise

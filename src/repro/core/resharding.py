@@ -93,18 +93,67 @@ def dedupe_shards(record: TensorRecord) -> list[ShardEntry]:
     return list(seen.values())
 
 
-def assemble(record: TensorRecord, wanted: Index, lookup) -> np.ndarray:
-    """Build the wanted window; ``lookup(shard) -> raw uint8 bytes``."""
+def record_dtype(record: TensorRecord) -> np.dtype:
     try:
-        dtype = np.dtype(record.dtype)
+        return np.dtype(record.dtype)
     except TypeError:
         import ml_dtypes
-        dtype = np.dtype(getattr(ml_dtypes, record.dtype))
-    out = np.empty(window_shape(wanted), dtype=dtype)
-    for piece in plan_window(record, wanted):
-        sh = piece.shard
-        raw = lookup(sh)
-        n = int(np.prod(window_shape(tuple(sh.index)), dtype=np.int64))
-        arr = raw.view(dtype)[:n].reshape(window_shape(tuple(sh.index)))
-        out[piece.dst] = arr[piece.src]
-    return out
+        return np.dtype(getattr(ml_dtypes, record.dtype))
+
+
+class WindowAssembler:
+    """Incrementally fills one wanted window from per-extent arrivals.
+
+    The batch path materialized every saved shard before assembly could
+    start; the streaming restore pipeline instead ``feed``s each shard's raw
+    bytes the moment its extent lands, so window assembly overlaps the reads
+    still in flight. Coverage is validated up front by ``plan_window``;
+    ``done`` flips once every contributing extent has been fed.
+    """
+
+    def __init__(self, record: TensorRecord, wanted: Index):
+        self.record = record
+        self.wanted = wanted
+        self.dtype = record_dtype(record)
+        self.out = np.empty(window_shape(wanted), dtype=self.dtype)
+        self._by_extent: dict[tuple[str, int], list[ReadPiece]] = {}
+        for piece in plan_window(record, wanted):
+            self._by_extent.setdefault(
+                (piece.shard.path, piece.shard.offset), []).append(piece)
+
+    def pending_shards(self) -> list[ShardEntry]:
+        """One ShardEntry per extent still needed (dedup: an extent feeding
+        several pieces of this window is listed once)."""
+        return [pieces[0].shard for pieces in self._by_extent.values()]
+
+    def feed(self, shard: ShardEntry, raw) -> None:
+        """``raw``: the shard's decoded bytes (uint8, ``shard.index`` worth of
+        elements); fills every piece of this window the extent contributes."""
+        pieces = self._by_extent.pop((shard.path, shard.offset), None)
+        if pieces is None:
+            return
+        sh_shape = window_shape(tuple(shard.index))
+        n = int(np.prod(sh_shape, dtype=np.int64))
+        arr = np.asarray(raw).view(self.dtype)[:n].reshape(sh_shape)
+        for piece in pieces:
+            self.out[piece.dst] = arr[piece.src]
+
+    @property
+    def done(self) -> bool:
+        return not self._by_extent
+
+    def result(self) -> np.ndarray:
+        if not self.done:
+            missing = [f"{p}@{off}" for p, off in self._by_extent]
+            raise RuntimeError(
+                f"window {self.wanted} of {self.record.key} incomplete: "
+                f"extents {missing[:3]} never arrived")
+        return self.out
+
+
+def assemble(record: TensorRecord, wanted: Index, lookup) -> np.ndarray:
+    """Build the wanted window; ``lookup(shard) -> raw uint8 bytes``."""
+    asm = WindowAssembler(record, wanted)
+    for sh in asm.pending_shards():
+        asm.feed(sh, lookup(sh))
+    return asm.result()

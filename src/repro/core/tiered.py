@@ -483,6 +483,13 @@ class RestorePrefetcher:
     directory to a committed level-0 step when the fetched extents cover the
     whole checkpoint (a resharded restore that reads a subset stays staged
     and is garbage-collected instead).
+
+    The staged level-0 copy feeds the same streaming ReadStream as a local
+    restore (the RestorePipeline's ``on_reqs`` hook fires ``fetch_extents``
+    with exactly the planned reads before the stream opens), so a level-1
+    resume gets the identical overlap of decode/assembly/H2D against the
+    local reads; ``last_fetch_stats`` attributes the tier-1 pull separately
+    (``RestoreMetrics.prefetch_seconds`` records its wall time).
     """
 
     STAGING_SUFFIX = ".tmp-prefetch"
@@ -493,6 +500,7 @@ class RestorePrefetcher:
         self._owns_transfer = transfer is None
         self.transfer = transfer or TieredTransferEngine()
         self._active: dict[str, dict] = {}   # staged dir -> state
+        self.last_fetch_stats: TransferStats | None = None
 
     def begin(self, step: int, local_dir: str) -> str | None:
         """Stage manifest + blob extents for ``step``; returns the staging
@@ -541,6 +549,7 @@ class RestorePrefetcher:
         stats = self.transfer.fetch_ranges(state["src"], staged, todo)
         for e in todo:
             state["fetched"][e.path].add(e.offset, e.offset + e.nbytes)
+        self.last_fetch_stats = stats
         return stats
 
     def finish(self, staged: str, final: str) -> bool:

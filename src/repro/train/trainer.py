@@ -106,14 +106,30 @@ class Trainer:
             step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
         start_step = 0
+        restore_attr: dict = {}
         if self.ckpt is not None:
             latest = self._latest()
             if latest is not None:
+                t0 = time.perf_counter()
                 restored = self.ckpt.restore(
                     state_template=self._full_state(state), step=latest)
+                restore_wall = time.perf_counter() - t0
                 state = restored["train"]
                 self.pipeline.load_state_dict(restored["data"])
                 start_step = int(np.asarray(state["step"]))
+                # stall attribution: where the resume time went (streaming
+                # restores overlap stages, so they no longer sum to wall)
+                rm = self.ckpt.last_restore_metrics
+                restore_attr = {"restore_seconds": restore_wall}
+                if rm is not None:
+                    restore_attr.update(
+                        restore_mode=rm.mode,
+                        restore_read_stall_s=rm.read_stall_seconds,
+                        restore_decode_s=rm.decode_seconds,
+                        restore_assemble_s=rm.assemble_seconds,
+                        restore_h2d_s=rm.h2d_seconds,
+                        restore_overlap_s=rm.overlap_seconds,
+                        restore_peak_staged_bytes=rm.peak_staged_bytes)
 
         ckpt_block_s = 0.0
         ckpt_reported_block_s = 0.0      # sum of SaveMetrics.blocking_seconds
@@ -150,7 +166,7 @@ class Trainer:
         return {"state": state, "wall_seconds": wall,
                 "ckpt_blocking_seconds": ckpt_block_s,
                 "ckpt_blocking_reported_s": ckpt_reported_block_s,
-                "metrics": self.metrics_log}
+                "metrics": self.metrics_log, **restore_attr}
 
     def _latest(self):
         try:
