@@ -1,11 +1,13 @@
 PY ?= python
 
-.PHONY: verify test bench-smoke bench-restore-smoke
+.PHONY: verify test bench-smoke bench-restore-smoke bench-concurrency-smoke
 
-# The ROADMAP tier-1 gate plus the save- and restore-path smoke benchmarks:
-# regressions in the test suite, pipelined blocking time, or streaming
-# restore (wall-clock, staging bound, bit-identity) fail loudly.
-verify: test bench-smoke bench-restore-smoke
+# The ROADMAP tier-1 gate plus the save-, restore-, and concurrency smoke
+# benchmarks: regressions in the test suite, pipelined blocking time,
+# streaming restore (wall-clock, staging bound, bit-identity), or the
+# multi-writer commit protocol (one committed dir, merged manifest,
+# elastic bit-identity) fail loudly.
+verify: test bench-smoke bench-restore-smoke bench-concurrency-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,3 +17,6 @@ bench-smoke:
 
 bench-restore-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_restore_alloc --smoke
+
+bench-concurrency-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_concurrency --smoke

@@ -1,0 +1,151 @@
+"""Concurrent multi-writer checkpointing sweep (DESIGN.md §11).
+
+Sweeps writers ∈ {1, 2, 4, 8} × layout ∈ {file-per-tensor, file-per-rank,
+single-file} through ``MultiWriterCheckpointer`` — N rank threads, each with
+its own engine, one shared two-phase rank-0 commit — and records the
+aggregate write throughput of every cell into a repo-root
+``BENCH_concurrency.json``. This is the paper's "many processes hit the PFS
+at once" axis: layouts differ in file count and metadata load, the
+single-file layout additionally pays the cross-rank prefix-sum exchange.
+
+``--smoke`` shrinks the state and additionally gates on protocol
+correctness: a 4-writer SINGLE_FILE save must leave exactly one committed
+step dir (no stray tmp dirs), and its merged manifest must restore
+bit-identically on 1-, 2-, and 4-rank reader meshes. Exits nonzero on any
+violation — wired into ``make verify`` and CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+
+import numpy as np
+
+from benchmarks.common import Report, fresh_dir
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+WRITERS = (1, 2, 4, 8)
+LAYOUTS = [
+    ("file-per-tensor", "file_per_tensor"),
+    ("file-per-rank", "file_per_process"),
+    ("single-file", "single_file"),
+]
+
+
+def _state(n_tensors: int, rows: int, cols: int) -> dict:
+    rng = np.random.default_rng(11)
+    return {"params": {
+        f"w{i}": rng.standard_normal((rows, cols)).astype(np.float32)
+        for i in range(n_tensors)}, "step": 0}
+
+
+def _total_bytes(state) -> int:
+    return sum(a.nbytes for a in state["params"].values())
+
+
+def run_sweep(rep: Report, smoke: bool) -> dict:
+    from repro.core import EngineConfig, MultiWriterCheckpointer
+
+    # full scale is sized to the container's one ~0.65 GB/s disk (§7):
+    # 64 MB state × 12 cells × reps stays inside a few minutes
+    n_tensors = 4 if smoke else 8
+    rows = 256 if smoke else 2048
+    cols = 1024
+    reps = 2 if smoke else 3
+    state = _state(n_tensors, rows, cols)
+    total = _total_bytes(state)
+
+    out = {"state_bytes": total, "tensors": n_tensors, "reps": reps,
+           "cells": {}}
+    for writers in WRITERS:
+        for label, strategy in LAYOUTS:
+            d = fresh_dir(f"conc_{writers}_{strategy}")
+            cfg = EngineConfig(strategy=strategy)
+            best = float("inf")
+            with MultiWriterCheckpointer(d, writers, config=cfg,
+                                         keep=2) as mw:
+                mw.save(0, state)          # warm: pools, prealloc
+                for r in range(1, reps + 1):
+                    os.sync()
+                    m = mw.save(r, state)
+                    best = min(best, m.end_to_end_seconds)
+            gbps = total / best / 1e9 if best else 0.0
+            out["cells"][f"{writers}x{label}"] = {
+                "writers": writers, "layout": label,
+                "seconds": round(best, 6),
+                "aggregate_write_gbps": round(gbps, 4)}
+            rep.add(config=f"{writers}w-{label}", seconds=best,
+                    aggregate_gbps=gbps, state_mb=total >> 20)
+    with open(os.path.join(ROOT, "BENCH_concurrency.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  -> BENCH_concurrency.json: {len(out['cells'])} cells, "
+          f"{total >> 20} MB state")
+    return out
+
+
+def check_protocol() -> list[str]:
+    """The §11 acceptance experiment: 4 concurrent SINGLE_FILE writers →
+    exactly one committed step dir, merged manifest, and bit-identical
+    restore on 1-, 2-, and 4-rank reader meshes."""
+    from repro.core import (EngineConfig, LocalShard, Manifest,
+                            MultiWriterCheckpointer)
+
+    errors: list[str] = []
+    state = _state(4, 128, 512)
+    d = fresh_dir("conc_protocol")
+    with MultiWriterCheckpointer(
+            d, 4, config=EngineConfig(strategy="single_file")) as mw:
+        mw.save(7, state)
+        entries = sorted(os.listdir(d))
+        if entries != ["step_00000007"]:
+            errors.append(f"expected exactly one committed step dir, "
+                          f"found {entries}")
+        else:
+            man = Manifest.load(os.path.join(d, "step_00000007"))
+            if man.num_ranks != 4:
+                errors.append(f"merged manifest num_ranks={man.num_ranks}")
+            if sorted(man.extra.get("merged_ranks", [])) != [0, 1, 2, 3]:
+                errors.append(
+                    f"merged_ranks={man.extra.get('merged_ranks')}")
+        full = mw.restore(step=7)
+        for k, want in state["params"].items():
+            if not np.array_equal(full["params"][k], want):
+                errors.append(f"full restore of {k} not bit-identical")
+        for m_ranks in (1, 2, 4):
+            trees = mw.restore_sharded(m_ranks, step=7)
+            for k, want in state["params"].items():
+                got = np.zeros_like(want)
+                for tree in trees:
+                    leaf = tree["params"][k]
+                    if isinstance(leaf, LocalShard):
+                        (lo, hi) = leaf.index[0]
+                        got[lo:hi] = leaf.data
+                    else:
+                        got[:] = leaf
+                if not np.array_equal(got, want):
+                    errors.append(
+                        f"{m_ranks}-rank elastic restore of {k} differs")
+    shutil.rmtree(d, ignore_errors=True)
+    return errors
+
+
+def run(smoke: bool = False):
+    rep = Report("bench_concurrency")
+    run_sweep(rep, smoke=smoke)
+    errors = check_protocol()
+    path = rep.save()
+    for e in errors:
+        print(f"SMOKE FAIL: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print("  protocol check: 1 committed dir, merged manifest, "
+          "1/2/4-rank restores bit-identical")
+    return path
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

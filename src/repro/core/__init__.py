@@ -8,11 +8,13 @@ Layers (bottom-up):
   manifest     tensor→extent metadata with global shard indices
   engines      aggregated (ours) + datastates/snapshot/torchsave baselines
   checkpoint   CheckpointManager: async save, atomic commit, elastic restore
+  multiwriter  N concurrent writer ranks, two-phase rank-0 merge commit
   tiered       tier-to-tier transfer engine: extent-hedged flush + prefetch
   multilevel   local→PFS two-level flush with hedged straggler mitigation
 """
 
-from .aggregation import ObjectSpec, Strategy, coalesce, plan_layout
+from .aggregation import (ObjectSpec, Strategy, coalesce, partition_spans,
+                          plan_layout)
 from .buffers import AlignedBuffer, BufferPool, PAGE
 from .checkpoint import CheckpointManager, SaveMetrics, RestoreMetrics
 from .engines import (AggregatedEngine, ChecksumError, CREngine,
@@ -21,8 +23,12 @@ from .engines import (AggregatedEngine, ChecksumError, CREngine,
                       TorchSaveEngine, make_cr_engine)
 from .io_engine import (IOEngine, IORequest, PosixEngine, ThreadPoolEngine,
                         UringEngine, make_engine, open_for)
-from .manifest import Manifest, ShardEntry, TensorRecord
+from .manifest import (Manifest, ManifestError, ManifestMergeError,
+                       ShardEntry, TensorRecord)
 from .multilevel import FlushStats, MultiLevelCheckpointer
+from .multiwriter import (CommitCoordinator, InProcessGroup, LocalShard,
+                          MultiSaveMetrics, MultiWriterAborted,
+                          MultiWriterCheckpointer, shard_state)
 from .pipeline import (PendingPut, RestorePipeline, RestoreTask,
                        SnapshotPipeline, build_save_puts)
 from .tiered import RestorePrefetcher, TieredTransferEngine, TransferStats
@@ -30,14 +36,17 @@ from .uring import IoUring, probe_io_uring
 
 __all__ = [
     "AggregatedEngine", "AlignedBuffer", "BufferPool", "CREngine",
-    "CheckpointManager", "ChecksumError", "DataStatesEngine", "EngineConfig",
-    "FlushStats", "IOEngine", "IORequest", "IoUring", "Manifest",
-    "MultiLevelCheckpointer", "ObjectSpec", "PAGE", "PendingPut",
-    "PosixEngine", "ReadReq", "ReadStream", "RestoreMetrics",
-    "RestorePipeline", "RestorePrefetcher", "RestoreTask", "SaveItem",
-    "SaveMetrics", "SaveSpec", "SaveStream", "ShardEntry", "SnapshotEngine",
-    "SnapshotPipeline", "Strategy", "TensorRecord", "ThreadPoolEngine",
-    "TieredTransferEngine", "TorchSaveEngine", "TransferStats", "UringEngine",
-    "build_save_puts", "coalesce", "make_cr_engine", "make_engine",
-    "open_for", "plan_layout", "probe_io_uring",
+    "CheckpointManager", "ChecksumError", "CommitCoordinator",
+    "DataStatesEngine", "EngineConfig", "FlushStats", "IOEngine",
+    "IORequest", "InProcessGroup", "IoUring", "LocalShard", "Manifest",
+    "ManifestError", "ManifestMergeError", "MultiLevelCheckpointer",
+    "MultiSaveMetrics", "MultiWriterAborted", "MultiWriterCheckpointer",
+    "ObjectSpec", "PAGE", "PendingPut", "PosixEngine", "ReadReq",
+    "ReadStream", "RestoreMetrics", "RestorePipeline", "RestorePrefetcher",
+    "RestoreTask", "SaveItem", "SaveMetrics", "SaveSpec", "SaveStream",
+    "ShardEntry", "SnapshotEngine", "SnapshotPipeline", "Strategy",
+    "TensorRecord", "ThreadPoolEngine", "TieredTransferEngine",
+    "TorchSaveEngine", "TransferStats", "UringEngine", "build_save_puts",
+    "coalesce", "make_cr_engine", "make_engine", "open_for",
+    "partition_spans", "plan_layout", "probe_io_uring", "shard_state",
 ]

@@ -87,6 +87,25 @@ def rank_padded_total(objects: list[ObjectSpec], align: int = PAGE) -> int:
     return sum(_align_up(o.nbytes, align) for o in objects)
 
 
+def partition_spans(n: int, parts: int) -> list[tuple[int, int]]:
+    """Split ``[0, n)`` into ``parts`` contiguous near-even spans.
+
+    The row-partition used by the multi-writer harness to assign each
+    writer (and each elastic-restore reader) its window of a global
+    tensor's leading dim. The first ``n % parts`` spans get the extra row,
+    so any two rank counts produce overlapping-but-coverable windows —
+    exactly what ``plan_window`` reshards across."""
+    if parts < 1:
+        raise ValueError("parts must be >= 1")
+    base, rem = divmod(n, parts)
+    out, start = [], 0
+    for p in range(parts):
+        size = base + (1 if p < rem else 0)
+        out.append((start, start + size))
+        start += size
+    return out
+
+
 def single_file_base_offsets(rank_totals: list[int], align: int = PAGE) -> list[int]:
     """Exclusive prefix-sum of per-rank padded totals (paper §3.6).
 

@@ -53,7 +53,7 @@ import numpy as np
 from .aggregation import ObjectSpec, Strategy, rank_padded_total
 from .engines import (ChecksumError, EngineConfig, ReadReq, SaveItem,
                       make_cr_engine)
-from .manifest import Manifest, crc32_of
+from .manifest import Manifest, ManifestError, crc32_of
 from .pipeline import (RestorePipeline, RestoreTask, SnapshotPipeline,
                        build_save_puts, iter_host_shards)
 from .resharding import assemble, dedupe_shards, normalize_index, plan_window
@@ -63,10 +63,90 @@ from .serialization import (LEAN_KEY, TensorStub, as_bytes_view,
                             to_numpy_view)
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
+_ASIDE_RE = re.compile(r"^(step_\d{8})\.tmp-old-")
+
+# in-flight ownership marker inside a .tmp-* dir: "<pid> <epoch>". A tmp dir
+# whose owner process is alive is a LIVE save — a second manager (or rank)
+# starting up must not GC it out from under the flush.
+OWNER_NAME = ".owner.pid"
+# ownerless tmp dirs younger than this are assumed mid-creation, not stale
+TMP_GRACE_S = 300.0
 
 
 def step_dir_name(step: int) -> str:
     return f"step_{step:08d}"
+
+
+def replace_dir(tmp: str, final: str) -> None:
+    """Atomically swap ``tmp`` in as ``final`` (the crash-safe publish).
+
+    ``os.replace`` cannot rename over a non-empty dir, and a naive
+    rmtree-then-replace leaves a window where a crash loses the PREVIOUS
+    version. The old version is renamed aside (still ``.tmp-``-patterned,
+    so aside dirs are GC-able), the new one renamed in — retried when a
+    concurrent starter's ``_gc_tmp`` rolls a displaced version back in
+    between — the parent dir fsync'd, and only then are the displaced
+    copies deleted: every point of the sequence leaves a restorable
+    version on disk."""
+    asides = []
+    for _attempt in range(5):
+        if os.path.exists(final):
+            aside = f"{final}.tmp-old-{uuid.uuid4().hex[:8]}"
+            os.replace(final, aside)
+            asides.append(aside)
+        try:
+            os.replace(tmp, final)
+            break
+        except OSError:
+            continue
+    else:
+        raise OSError(f"could not publish {tmp} over {final}")
+    fd = os.open(os.path.dirname(final) or ".", os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    for aside in asides:
+        shutil.rmtree(aside, ignore_errors=True)
+
+
+def write_owner(tmp: str) -> None:
+    import socket
+    with open(os.path.join(tmp, OWNER_NAME), "w") as f:
+        f.write(f"{os.getpid()} {time.time():.3f} {socket.gethostname()}")
+
+
+def _dir_is_young(path: str) -> bool:
+    try:
+        return time.time() - os.path.getmtime(path) < TMP_GRACE_S
+    except OSError:
+        return False       # vanished concurrently
+
+
+def tmp_in_flight(path: str) -> bool:
+    """True when a .tmp-* dir belongs to a live in-flight save."""
+    import socket
+    try:
+        with open(os.path.join(path, OWNER_NAME)) as f:
+            parts = f.read().split()
+        pid = int(parts[0])
+        host = parts[2] if len(parts) > 2 else None
+    except (OSError, ValueError, IndexError):
+        # no/illegible owner record: fall back to age
+        return _dir_is_young(path)
+    if host is not None and host != socket.gethostname():
+        # shared-FS dir owned by ANOTHER host: its pids mean nothing to this
+        # kernel, so liveness is unknowable here — age is the only signal
+        return _dir_is_young(path)
+    if pid == os.getpid():
+        return True        # another manager/rank in THIS process
+    try:
+        os.kill(pid, 0)
+        return True
+    except ProcessLookupError:
+        return False       # owner died: stale, safe to reap
+    except PermissionError:
+        return True        # exists, owned by another user
 
 
 def parse_dtype(name: str) -> np.dtype:
@@ -177,6 +257,13 @@ class CheckpointManager:
         # Optional tiered.RestorePrefetcher: when set, restore of a step not
         # committed here is staged from the remote tier extent-by-extent.
         self.prefetcher = None
+        # Optional multiwriter.CommitCoordinator: when set, _commit runs the
+        # two-phase rank-0 protocol (per-rank manifests, merge, one rename)
+        # instead of publishing per manager (DESIGN.md §11).
+        self.coordinator = None
+        # Optional allgather shim: (value, rank, num_ranks) -> list[int],
+        # overriding the jax multihost exchange for in-process writer ranks.
+        self.allgather = None
         self._gc_tmp()
 
     # ---------------------------------------------------------------- steps
@@ -193,10 +280,45 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def _gc_tmp(self) -> None:
+        """Reap stale ``.tmp-*`` dirs — but never a live in-flight save's.
+
+        Two guards close the startup races: (1) a displaced previous version
+        (``.tmp-old-*``, see ``_publish``) whose final step dir never landed
+        is RECOVERED, not deleted — a crash inside the publish window cannot
+        lose the prior checkpoint; (2) a tmp dir owned by a live process
+        (ownership pidfile; young-dir age as fallback) is another manager's
+        or rank's save mid-flush and is left alone."""
         for name in os.listdir(self.directory):
-            if ".tmp-" in name:
-                shutil.rmtree(os.path.join(self.directory, name),
-                              ignore_errors=True)
+            if ".tmp-" not in name:
+                continue
+            full = os.path.join(self.directory, name)
+            m = _ASIDE_RE.match(name)
+            if m:
+                final = os.path.join(self.directory, m.group(1))
+                if Manifest.exists(full) and not os.path.exists(final):
+                    try:
+                        os.replace(full, final)   # publish crashed: roll back
+                        continue
+                    except OSError:
+                        # a LIVE publisher landed the new version between our
+                        # exists() check and the rename; if final is still
+                        # missing, keep the aside for the next startup
+                        if not os.path.exists(final):
+                            continue
+            elif tmp_in_flight(full):
+                continue
+            shutil.rmtree(full, ignore_errors=True)
+
+    def _make_tmp(self, step: int) -> str:
+        """Create (or join, under a coordinator) the step's staging dir."""
+        if self.coordinator is not None:
+            return self.coordinator.tmp_dir(self.directory, step)
+        tmp = os.path.join(
+            self.directory,
+            f"{step_dir_name(step)}.tmp-{uuid.uuid4().hex[:8]}")
+        os.makedirs(tmp, exist_ok=True)
+        write_owner(tmp)
+        return tmp
 
     def _gc_old(self) -> None:
         steps = self.all_steps()
@@ -263,9 +385,7 @@ class CheckpointManager:
                 self.config.align)
             rank_totals = self._allgather_totals(local_total, rank, num_ranks)
 
-        tmp = os.path.join(self.directory,
-                           f"{step_dir_name(step)}.tmp-{uuid.uuid4().hex[:8]}")
-        os.makedirs(tmp, exist_ok=True)
+        tmp = self._make_tmp(step)
         pipeline = SnapshotPipeline(self.engine)
 
         staged = threading.Event()
@@ -281,7 +401,7 @@ class CheckpointManager:
                 st = self.engine.last_save_stats
                 metrics.d2h_seconds = st.copy_seconds + st.alloc_seconds
                 self._commit(manifest, tmp, step, quantized_keys, metrics,
-                             t_start)
+                             t_start, rank=rank)
             finally:
                 staged.set()   # never leave wait_snapshotted() hanging
 
@@ -335,9 +455,7 @@ class CheckpointManager:
                 [ObjectSpec(i.key, i.nbytes) for i in items], self.config.align)
             rank_totals = self._allgather_totals(local_total, rank, num_ranks)
 
-        tmp = os.path.join(self.directory,
-                           f"{step_dir_name(step)}.tmp-{uuid.uuid4().hex[:8]}")
-        os.makedirs(tmp, exist_ok=True)
+        tmp = self._make_tmp(step)
 
         def flush():
             t1 = time.perf_counter()
@@ -346,7 +464,7 @@ class CheckpointManager:
                                         rank_totals=rank_totals)
             metrics.flush_seconds = time.perf_counter() - t1
             self._commit(manifest, tmp, step, quantized_keys, metrics,
-                         t_start)
+                         t_start, rank=rank)
 
         if self.async_save:
             metrics.blocking_seconds = time.perf_counter() - t_start
@@ -360,8 +478,12 @@ class CheckpointManager:
             metrics.blocking_seconds = metrics.end_to_end_seconds
 
     def _commit(self, manifest, tmp, step, quantized_keys, metrics,
-                t_start) -> None:
-        """Manifest write + atomic rename + GC (paper §2 stage 4)."""
+                t_start, rank: int = 0) -> None:
+        """Manifest write + atomic publish + GC (paper §2 stage 4).
+
+        Under a multi-writer ``coordinator`` this becomes phase 1 + the
+        rank-0 phase 2 of the two-phase commit (DESIGN.md §11); the step dir
+        is renamed exactly once, by rank 0."""
         t2 = time.perf_counter()
         manifest.extra["save_metrics"] = {
             "total_bytes": metrics.total_bytes,
@@ -369,15 +491,24 @@ class CheckpointManager:
         }
         if quantized_keys:
             manifest.extra["quantized"] = quantized_keys
-        manifest.save(tmp)
-        final = os.path.join(self.directory, step_dir_name(step))
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-        self._fsync_dir(self.directory)
+        if self.coordinator is not None:
+            self.coordinator.commit(self, manifest, tmp, step, rank)
+        else:
+            manifest.save(tmp)
+            self._publish(tmp, step)
+            self._gc_old()
         metrics.commit_seconds = time.perf_counter() - t2
         metrics.end_to_end_seconds = time.perf_counter() - t_start
-        self._gc_old()
+
+    def _publish(self, tmp: str, step: int) -> None:
+        """Atomically swap ``tmp`` in as the step dir (``replace_dir``;
+        ``_gc_tmp`` rolls a displaced-but-never-replaced version back, so a
+        crash anywhere in the sequence leaves a restorable checkpoint)."""
+        try:
+            os.remove(os.path.join(tmp, OWNER_NAME))
+        except OSError:
+            pass
+        replace_dir(tmp, os.path.join(self.directory, step_dir_name(step)))
 
     def _guard(self, fn):
         def wrapped():
@@ -411,19 +542,39 @@ class CheckpointManager:
 
     # -------------------------------------------------------------- restore
     def restore(self, state_template=None, *, step: int | None = None,
-                shardings=None):
+                shardings=None, window_fn=None):
         """Restore a checkpoint.
 
         ``state_template``: a pytree of like-shaped arrays (or
         ShapeDtypeStructs) whose shardings define the target placement. When
         None, tensors come back as host numpy arrays in the saved tree
         structure (using the lean object).
+
+        ``window_fn(record) -> [(window, placement_or_None), ...]`` overrides
+        the per-tensor wanted windows (the multi-writer elastic restore
+        materializes one row-partition window per reader rank this way).
+
+        When ``step`` is None, a step whose manifest is truncated/corrupt
+        (``ManifestError``) is skipped and the next-older step restored; an
+        explicitly requested step propagates the error.
         """
+        if step is not None:
+            return self._restore_step(step, state_template, shardings,
+                                      window_fn)
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        last_err: ManifestError | None = None
+        for s in reversed(steps):
+            try:
+                return self._restore_step(s, state_template, shardings,
+                                          window_fn)
+            except ManifestError as e:
+                last_err = e   # corrupt manifest: fall back to older step
+        raise last_err
+
+    def _restore_step(self, step: int, state_template, shardings, window_fn):
         t_start = time.perf_counter()
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoints in {self.directory}")
         ckpt = os.path.join(self.directory, step_dir_name(step))
         prefetch = None
         if self.prefetcher is not None and not Manifest.exists(ckpt):
@@ -434,14 +585,14 @@ class CheckpointManager:
                 ckpt, prefetch = staged, self.prefetcher
         try:
             return self._restore_from(ckpt, step, state_template, shardings,
-                                      prefetch, t_start)
+                                      prefetch, t_start, window_fn)
         except BaseException:
             if prefetch is not None:
                 prefetch.discard(ckpt)
             raise
 
     def _restore_from(self, ckpt: str, step: int, state_template, shardings,
-                      prefetch, t_start: float):
+                      prefetch, t_start: float, window_fn=None):
         manifest = Manifest.load(ckpt)
         metrics = RestoreMetrics(
             step=step, mode="streaming" if self.streaming else "monolithic")
@@ -462,8 +613,11 @@ class CheckpointManager:
             template_by_key = _template_tensors(state_template)
         for stub in iter_stubs(lean_tree):
             rec = manifest.tensors[stub.key]
-            tmpl = template_by_key.get(stub.key)
-            shard_list = self._target_windows(rec, tmpl, shardings)
+            if window_fn is not None:
+                shard_list = window_fn(rec)
+            else:
+                tmpl = template_by_key.get(stub.key)
+                shard_list = self._target_windows(rec, tmpl, shardings)
             wanted[stub.key] = shard_list
 
         qset = set(manifest.extra.get("quantized", ()))
@@ -573,8 +727,15 @@ class CheckpointManager:
         for arr, idx in iter_host_shards(t):
             yield to_numpy_view(arr), idx
 
-    @staticmethod
-    def _allgather_totals(local_total: int, rank: int, num_ranks: int) -> list[int]:
+    def _allgather_totals(self, local_total: int, rank: int,
+                          num_ranks: int) -> list[int]:
+        """Cross-rank padded-total exchange for SINGLE_FILE (paper §3.6).
+
+        ``self.allgather`` (an in-process shim under the multi-writer
+        harness) overrides the jax multihost path."""
+        if self.allgather is not None:
+            return [int(x) for x in self.allgather(local_total, rank,
+                                                   num_ranks)]
         if num_ranks == 1:
             return [local_total]
         from jax.experimental import multihost_utils

@@ -79,7 +79,17 @@ class _AggSaveStream(SaveStream):
         self.t0 = time.perf_counter()
         self.plan = eng._plan(self.specs, rank, rank_totals)
         self.extents = {e.key: e for e in self.plan.extents}
-        self.fds = eng._open_files(ckpt_dir, self.plan, "w", preallocate=True)
+        regions = None
+        if not cfg.truncate:
+            # shared-file (multi-rank) mode: preallocate only this rank's
+            # extent span, not the whole file once per rank
+            regions = {}
+            for path, exts in self.plan.by_file().items():
+                start = exts[0].offset
+                end = exts[-1].offset + align_up(exts[-1].nbytes, cfg.align)
+                regions[path] = (start, end - start)
+        self.fds = eng._open_files(ckpt_dir, self.plan, "w",
+                                   preallocate=True, regions=regions)
         self.stats.files = len(self.fds)
         self.io = eng._make_io()
         self.budget = StageBudget(cfg.inflight_bytes)

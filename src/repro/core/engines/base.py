@@ -384,6 +384,8 @@ class CREngine:
                 m.add_shard(rkey, it.dtype or "uint8",
                             it.global_shape if it.global_shape is not None else (it.nbytes,),
                             ShardEntry(index, e.path, e.offset, e.nbytes, crc))
+        # the writing rank, so a merge (rank-0 commit) is idempotent per rank
+        m.extra["rank"] = plan.rank
         m.extra["engine"] = {
             "name": self.name, "backend": self.config.backend,
             "direct": self.config.direct, "queue_depth": self.config.queue_depth,
@@ -393,7 +395,13 @@ class CREngine:
         return m
 
     def _open_files(self, ckpt_dir: str, plan_or_paths, mode: str,
-                    preallocate: bool = False) -> dict[str, int]:
+                    preallocate: bool = False,
+                    regions: dict[str, tuple[int, int]] | None = None
+                    ) -> dict[str, int]:
+        """``regions`` maps path -> (offset, length) to preallocate instead
+        of the whole file — in multi-rank shared-file mode each rank
+        fallocates only ITS region, keeping the serialized metadata op
+        O(per-rank bytes) rather than O(file size) × ranks."""
         fds: dict[str, int] = {}
         if isinstance(plan_or_paths, WritePlan):
             sizes = plan_or_paths.file_sizes
@@ -405,8 +413,10 @@ class CREngine:
                 else mode
             fd = open_for(full, mode_eff, direct=self.config.direct)
             if preallocate and mode != "r" and size:
+                off, length = (regions or {}).get(path, (0, size))
                 try:
-                    os.posix_fallocate(fd, 0, size)
+                    if length:
+                        os.posix_fallocate(fd, off, length)
                 except OSError:
                     pass
             fds[path] = fd

@@ -15,11 +15,29 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import zlib
 from dataclasses import dataclass, field, asdict
 
 MANIFEST_NAME = "manifest.json"
 FORMAT_VERSION = 2
+
+_RANK_MANIFEST_RE = re.compile(r"^MANIFEST\.rank-(\d+)$")
+
+
+def rank_manifest_name(rank: int) -> str:
+    """Per-rank manifest file in a (tmp) step dir — phase 1 of the
+    multi-writer commit (DESIGN.md §11). ``manifest.json`` remains the one
+    and only name that makes a checkpoint valid."""
+    return f"MANIFEST.rank-{rank}"
+
+
+class ManifestError(ValueError):
+    """Manifest missing, truncated, corrupt, or semantically invalid."""
+
+
+class ManifestMergeError(ManifestError):
+    """Per-rank manifests disagree (step / strategy / tensor shape)."""
 
 
 @dataclass(frozen=True)
@@ -98,12 +116,59 @@ class Manifest:
                 raise ValueError(f"inconsistent tensor record for {key}")
         rec.shards.append(entry)
 
-    def merge(self, other: "Manifest") -> None:
-        """Merge per-rank manifests into the global one (rank-0 commit)."""
+    def merge(self, other: "Manifest", *, rank: int | None = None) -> None:
+        """Merge a per-rank manifest into this (global) one — rank-0 commit.
+
+        Raises ``ManifestMergeError`` when the two manifests describe
+        different checkpoints (step, strategy) or disagree on a tensor's
+        dtype/global_shape. Idempotent: re-merging a rank already merged
+        (``rank`` arg, or the manifest's recorded ``extra["rank"]``) is a
+        no-op, and an exact-duplicate ``ShardEntry`` is skipped — a retried
+        commit cannot accumulate duplicates that corrupt restore windows.
+        Blobs keep the first writer's copy (every rank's lean object is
+        equivalent)."""
+        if other.step != self.step:
+            raise ManifestMergeError(
+                f"cannot merge manifests of different steps: "
+                f"{self.step} vs {other.step}")
+        if other.strategy != self.strategy:
+            raise ManifestMergeError(
+                f"cannot merge manifests of different strategies: "
+                f"{self.strategy!r} vs {other.strategy!r}")
+        if rank is None:
+            rank = other.extra.get("rank")
+        merged = self.extra.setdefault("merged_ranks", [])
+        own = self.extra.get("rank")
+        if own is not None and own not in merged:
+            merged.append(own)
+        if rank is not None and rank in merged:
+            return
+        # validate EVERYTHING before mutating anything: a mid-merge raise
+        # must not leave this manifest half-merged yet marked as merged
         for key, rec in other.tensors.items():
+            mine = self.tensors.get(key)
+            if mine is not None and (
+                    mine.dtype != rec.dtype
+                    or tuple(mine.global_shape) != tuple(rec.global_shape)):
+                raise ManifestMergeError(
+                    f"tensor {key!r} disagrees across ranks: "
+                    f"{mine.dtype}{tuple(mine.global_shape)} vs "
+                    f"{rec.dtype}{tuple(rec.global_shape)}")
+        for key, rec in other.tensors.items():
+            mine = self.tensors.get(key)
             for s in rec.shards:
+                if mine is not None and s in mine.shards:
+                    continue   # already merged (re-merge / retry)
                 self.add_shard(key, rec.dtype, rec.global_shape, s)
-        self.blobs.update(other.blobs)
+                mine = self.tensors[key]
+        for k, b in other.blobs.items():
+            self.blobs.setdefault(k, b)
+        if rank is not None:
+            merged.append(rank)
+        q = set(self.extra.get("quantized", ())) \
+            | set(other.extra.get("quantized", ()))
+        if q:
+            self.extra["quantized"] = sorted(q)
 
     @property
     def total_bytes(self) -> int:
@@ -123,29 +188,74 @@ class Manifest:
 
     @staticmethod
     def loads(data: bytes) -> "Manifest":
-        d = json.loads(data)
-        if d["format_version"] > FORMAT_VERSION:
-            raise ValueError(f"manifest from the future: {d['format_version']}")
-        m = Manifest(d["step"], d["num_ranks"], d["strategy"],
-                     d["format_version"])
-        m.tensors = {k: TensorRecord.from_json(v) for k, v in d["tensors"].items()}
-        m.blobs = {k: BlobRecord.from_json(v) for k, v in d["blobs"].items()}
-        m.extra = d.get("extra", {})
-        return m
+        """Parse manifest bytes; any structural defect (truncated JSON,
+        missing fields, malformed records) raises ``ManifestError`` so
+        callers can fall back to an older checkpoint instead of dying on a
+        raw ``JSONDecodeError``/``KeyError``."""
+        try:
+            d = json.loads(data)
+            if d["format_version"] > FORMAT_VERSION:
+                raise ManifestError(
+                    f"manifest from the future: {d['format_version']}")
+            m = Manifest(d["step"], d["num_ranks"], d["strategy"],
+                         d["format_version"])
+            m.tensors = {k: TensorRecord.from_json(v)
+                         for k, v in d["tensors"].items()}
+            m.blobs = {k: BlobRecord.from_json(v)
+                       for k, v in d["blobs"].items()}
+            m.extra = d.get("extra", {})
+            return m
+        except ManifestError:
+            raise
+        except (ValueError, KeyError, TypeError, AttributeError) as e:
+            raise ManifestError(f"corrupt manifest: {e}") from e
 
-    def save(self, ckpt_dir: str) -> None:
+    def _write(self, path: str) -> None:
         payload = self.dumps()
-        tmp = os.path.join(ckpt_dir, MANIFEST_NAME + ".tmp")
+        tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(payload)
             f.flush()
             os.fsync(f.fileno())
-        os.replace(tmp, os.path.join(ckpt_dir, MANIFEST_NAME))
+        os.replace(tmp, path)
+
+    def save(self, ckpt_dir: str) -> None:
+        self._write(os.path.join(ckpt_dir, MANIFEST_NAME))
+
+    def save_rank(self, ckpt_dir: str, rank: int) -> None:
+        """Write this rank's manifest as ``MANIFEST.rank-{r}`` (fsync'd,
+        atomically renamed). Does NOT make the checkpoint valid — only the
+        merged ``manifest.json`` does."""
+        self._write(os.path.join(ckpt_dir, rank_manifest_name(rank)))
+
+    @staticmethod
+    def _read(path: str) -> "Manifest":
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError as e:
+            raise ManifestError(f"unreadable manifest {path}: {e}") from e
+        return Manifest.loads(data)
 
     @staticmethod
     def load(ckpt_dir: str) -> "Manifest":
-        with open(os.path.join(ckpt_dir, MANIFEST_NAME), "rb") as f:
-            return Manifest.loads(f.read())
+        return Manifest._read(os.path.join(ckpt_dir, MANIFEST_NAME))
+
+    @staticmethod
+    def load_rank(ckpt_dir: str, rank: int) -> "Manifest":
+        return Manifest._read(
+            os.path.join(ckpt_dir, rank_manifest_name(rank)))
+
+    @staticmethod
+    def rank_manifests(ckpt_dir: str) -> list[int]:
+        """Ranks that completed phase 1 (their ``MANIFEST.rank-{r}`` is on
+        disk) in a step dir."""
+        out = []
+        for name in os.listdir(ckpt_dir):
+            m = _RANK_MANIFEST_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
 
     @staticmethod
     def exists(ckpt_dir: str) -> bool:

@@ -29,7 +29,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor, wait, FIRST_COMPLETED
 from dataclasses import dataclass, field
 
-from .checkpoint import CheckpointManager, step_dir_name
+from .checkpoint import CheckpointManager, replace_dir, step_dir_name
 from .manifest import Manifest
 from .tiered import RestorePrefetcher, TieredTransferEngine
 
@@ -156,7 +156,10 @@ class MultiLevelCheckpointer:
             stats.hedge_wins = ts.hedge_wins
             stats.backend = ts.backend
             stats.per_tier = ts.per_tier()
-        os.replace(dst_tmp, dst_fin)
+        # the shared displaced-aside publish: a re-flush of an existing
+        # remote step never leaves a window where the previous copy is gone
+        # before the new one landed
+        replace_dir(dst_tmp, dst_fin)
         stats.seconds = time.perf_counter() - t0
         if stats.seconds:
             stats.read_gbps = (stats.per_tier.get("source", {})

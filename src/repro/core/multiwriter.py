@@ -1,0 +1,447 @@
+"""Concurrent multi-writer checkpointing: N ranks, one directory, one commit.
+
+The paper frames checkpointing as "many processes, each managing numerous
+tensors" contending for the PFS — yet a single ``CheckpointManager`` only
+ever exercises one writer. This module runs the concurrency scenario the
+engine stack was designed for, inside one process (DESIGN.md §11):
+
+  · ``MultiWriterCheckpointer`` drives N writer ranks as threads, each with
+    its OWN ``CheckpointManager``/engine pair sharing one checkpoint
+    directory and one shared staging dir per step,
+  · ``InProcessGroup`` is the process-group shim: a reusable barrier plus an
+    allgather that carries the SINGLE_FILE ``rank_totals`` prefix-sum
+    exchange (paper §3.6) — so N ranks write disjoint regions of one file,
+  · ``CommitCoordinator`` implements the two-phase rank-0 commit
+    (ByteCheckpoint's decoupled per-rank-plan/global-commit): every rank
+    flushes + fsyncs its shards and writes ``MANIFEST.rank-{r}``, barriers;
+    then rank 0 alone merges the on-disk rank manifests (validated,
+    idempotent — ``Manifest.merge``), writes the global ``manifest.json``,
+    and atomically publishes the step dir exactly once,
+  · elastic restore: an N-rank checkpoint restores bit-identically onto an
+    M-rank mesh — ``restore_sharded`` hands each reader rank its
+    row-partition window, assembled from the saved shards it intersects by
+    the existing ``WindowAssembler`` machinery.
+
+Failure semantics: a rank failing before a barrier aborts the group — peers
+unblock with ``MultiWriterAborted`` instead of hanging — and the step is
+never published (the shared ``.tmp-*`` dir is owned by this process, so a
+later manager's GC leaves it alone until the owner dies).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field, replace
+
+import jax
+import numpy as np
+
+from .aggregation import partition_spans
+from .checkpoint import CheckpointManager, step_dir_name, write_owner
+from .engines import EngineConfig
+from .manifest import Manifest
+from .serialization import LocalShard, path_str
+
+
+class MultiWriterAborted(RuntimeError):
+    """A peer rank failed; this rank's save was aborted, nothing committed."""
+
+
+def _fanout(n: int, fn, name: str) -> tuple[list, list]:
+    """Run ``fn(rank)`` on n threads; returns (results, exceptions) by rank."""
+    outs: list = [None] * n
+    errs: list[BaseException | None] = [None] * n
+
+    def run(r: int) -> None:
+        try:
+            outs[r] = fn(r)
+        except BaseException as e:
+            errs[r] = e
+
+    threads = [threading.Thread(target=run, args=(r,), name=f"{name}{r}")
+               for r in range(n)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    return outs, errs
+
+
+class InProcessGroup:
+    """Barrier + allgather for N thread-ranks (the process-group shim)."""
+
+    def __init__(self, num_ranks: int):
+        if num_ranks < 1:
+            raise ValueError("num_ranks must be >= 1")
+        self.num_ranks = num_ranks
+        self._barrier = threading.Barrier(num_ranks)
+        self._vals: list = [None] * num_ranks
+
+    def barrier(self) -> None:
+        try:
+            self._barrier.wait()
+        except threading.BrokenBarrierError:
+            raise MultiWriterAborted(
+                "a peer writer rank failed before the barrier") from None
+
+    def allgather(self, value, rank: int, num_ranks: int | None = None
+                  ) -> list:
+        """Every rank contributes ``value``; all receive the rank-ordered
+        list. Two barrier phases make the exchange reusable round after
+        round (no rank may overwrite its slot before all peers read it)."""
+        if num_ranks is not None and num_ranks != self.num_ranks:
+            raise ValueError(
+                f"allgather across {num_ranks} ranks on a "
+                f"{self.num_ranks}-rank group")
+        self._vals[rank] = value
+        self.barrier()
+        out = list(self._vals)
+        self.barrier()
+        return out
+
+    def abort(self) -> None:
+        """Break the barrier: peers blocked (or arriving) get
+        ``MultiWriterAborted`` instead of hanging on a dead rank."""
+        self._barrier.abort()
+
+    def reset(self) -> None:
+        self._barrier.reset()
+
+
+class CommitCoordinator:
+    """Two-phase rank-0 commit over a shared per-step staging dir.
+
+    Phase 1 (every rank, from ``CheckpointManager._commit``): the rank's
+    shards are already flushed + fsync'd into the shared tmp dir; write
+    ``MANIFEST.rank-{r}``; barrier.
+    Phase 2 (rank 0): load the rank manifests OFF DISK (the only channel a
+    real multi-host rank 0 has), merge with validation + per-rank
+    idempotency, write the global ``manifest.json``, publish the step dir
+    with the manager's atomic displaced-aside rename — exactly once — and GC
+    old steps. A second barrier releases the peers only after the publish,
+    so every rank's ``save`` returns with the checkpoint durable.
+    """
+
+    def __init__(self, group: InProcessGroup):
+        self.group = group
+        self._lock = threading.Lock()
+        self._tmp: dict[int, str] = {}          # step -> shared staging dir
+        self._err: BaseException | None = None
+
+    def tmp_dir(self, directory: str, step: int) -> str:
+        """The step's shared staging dir; first rank in creates + owns it."""
+        with self._lock:
+            tmp = self._tmp.get(step)
+            if tmp is None:
+                tmp = os.path.join(
+                    directory,
+                    f"{step_dir_name(step)}.tmp-mw-{uuid.uuid4().hex[:8]}")
+                os.makedirs(tmp, exist_ok=True)
+                write_owner(tmp)
+                self._tmp[step] = tmp
+            return tmp
+
+    def discard(self, step: int) -> None:
+        """Drop (and delete) a failed save's shared staging dir so a retry
+        of the step starts clean instead of committing stale files."""
+        with self._lock:
+            tmp = self._tmp.pop(step, None)
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    def commit(self, mgr: CheckpointManager, manifest: Manifest, tmp: str,
+               step: int, rank: int) -> None:
+        manifest.save_rank(tmp, rank)
+        self.group.barrier()             # phase 1: all ranks durable
+        if rank == 0:
+            try:
+                merged = Manifest.load_rank(tmp, 0)
+                for r in range(1, self.group.num_ranks):
+                    merged.merge(Manifest.load_rank(tmp, r), rank=r)
+                merged.num_ranks = self.group.num_ranks
+                merged.save(tmp)
+                mgr._publish(tmp, step)
+                mgr._gc_old()
+                self._err = None
+                # drop the staging entry only on success — on failure it
+                # stays registered so _save_all's discard() can reclaim it
+                with self._lock:
+                    self._tmp.pop(step, None)
+            except BaseException as e:
+                self._err = e
+        self.group.barrier()             # phase 2: publish visible to all
+        if self._err is not None:
+            if rank == 0:
+                raise self._err
+            raise MultiWriterAborted("rank-0 commit failed") from self._err
+
+
+@dataclass
+class MultiSaveMetrics:
+    """Aggregate view over the N concurrent rank saves."""
+    step: int
+    num_ranks: int
+    total_bytes: int = 0
+    blocking_seconds: float = 0.0    # caller stall (partition + submit)
+    end_to_end_seconds: float = 0.0  # slowest rank, incl. the shared commit
+    mode: str = "blocking"           # blocking | async
+    per_rank: list = field(default_factory=list)   # SaveMetrics per rank
+
+    @property
+    def aggregate_gbps(self) -> float:
+        """Aggregate write throughput: all ranks' bytes over the concurrent
+        wall — the paper's under-contention number."""
+        return (self.total_bytes / self.end_to_end_seconds / 1e9
+                if self.end_to_end_seconds else 0.0)
+
+
+def shard_state(state, num_ranks: int, *, snapshot: bool = False
+                ) -> list:
+    """Partition a global pytree row-wise into N per-rank pytrees.
+
+    Tensor leaves whose leading dim holds ``num_ranks`` spans become
+    ``LocalShard`` windows (one per rank, host-materialized now — this is
+    the harness's D2H stage); short/0-d tensors are replicated (every rank
+    saves the full window, restore dedupes identical windows like DP
+    replicas). ``snapshot=True`` additionally deep-copies every payload so
+    an async caller may mutate or donate its arrays the moment ``save``
+    returns.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    per_rank: list[list] = [[] for _ in range(num_ranks)]
+    for _path, leaf in flat:
+        is_typed_prng = (isinstance(leaf, jax.Array) and jax.dtypes.
+                         issubdtype(leaf.dtype, jax.dtypes.prng_key))
+        if is_typed_prng:
+            if snapshot:   # rebind off the (donatable) source buffer
+                leaf = jax.random.wrap_key_data(
+                    jax.numpy.array(jax.random.key_data(leaf)),
+                    impl=str(jax.random.key_impl(leaf)))
+            for lv in per_rank:
+                lv.append(leaf)
+            continue
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            for lv in per_rank:
+                lv.append(leaf)
+            continue
+        arr = np.asarray(leaf)
+        if snapshot:
+            arr = np.array(arr, copy=True)
+        if arr.ndim == 0 or arr.shape[0] < num_ranks:
+            for lv in per_rank:
+                lv.append(arr)     # replicated: full window on every rank
+            continue
+        gs = tuple(arr.shape)
+        for r, (lo, hi) in enumerate(partition_spans(gs[0], num_ranks)):
+            idx = ((lo, hi),) + tuple((0, d) for d in gs[1:])
+            per_rank[r].append(LocalShard(arr[lo:hi], idx, gs))
+    return [jax.tree_util.tree_unflatten(treedef, lv) for lv in per_rank]
+
+
+class MultiWriterCheckpointer:
+    """Run N writer ranks concurrently (thread-per-rank) over one directory.
+
+    ``save`` takes the GLOBAL state, partitions it across ranks
+    (``shard_state``), and drives one blocking ``CheckpointManager.save``
+    per rank thread through the shared two-phase commit. ``restore`` runs on
+    rank 0's manager with full template/sharding support (any single reader
+    can restore an N-rank checkpoint — that is the point of the merged
+    manifest); ``restore_sharded`` materializes per-reader-rank windows on
+    an M-rank mesh.
+    """
+
+    def __init__(self, directory: str, num_ranks: int, *,
+                 engine: str = "aggregated",
+                 config: EngineConfig | None = None,
+                 async_save: bool = False, keep: int = 3,
+                 verify_crc: bool = True, streaming: bool = True,
+                 **mgr_kw):
+        self.directory = os.path.abspath(directory)
+        self.num_ranks = num_ranks
+        self.async_save = async_save
+        self.engine_name = engine
+        self.group = InProcessGroup(num_ranks)
+        self.coordinator = CommitCoordinator(self.group)
+        base = config if config is not None else EngineConfig()
+        self._base_config = replace(base)
+        self.managers: list[CheckpointManager] = []
+        for _r in range(num_ranks):
+            cfg = replace(base)
+            # ranks share files under SINGLE_FILE: nobody truncates a peer's
+            # extents (the tmp dir is fresh per step, so nothing is stale)
+            cfg.truncate = False
+            mgr = CheckpointManager(
+                directory, engine=engine, config=cfg, async_save=False,
+                keep=keep, verify_crc=verify_crc, streaming=streaming,
+                **mgr_kw)
+            mgr.coordinator = self.coordinator
+            mgr.allgather = self.group.allgather
+            self.managers.append(mgr)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self.last_save_metrics: MultiSaveMetrics | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state) -> MultiSaveMetrics:
+        """Checkpoint the global ``state`` through N concurrent writers.
+
+        The partition (and, async, a stable host snapshot of every payload)
+        happens on the blocking path; with ``async_save`` the N rank flushes
+        and the two-phase commit then drain on a driver thread."""
+        self.wait()
+        t0 = time.perf_counter()
+        shards = shard_state(state, self.num_ranks,
+                             snapshot=self.async_save)
+        metrics = MultiSaveMetrics(
+            step=step, num_ranks=self.num_ranks,
+            mode="async" if self.async_save else "blocking")
+        self.last_save_metrics = metrics
+        if self.async_save:
+            metrics.blocking_seconds = time.perf_counter() - t0
+            self._error = None
+            th = threading.Thread(
+                target=self._run_guarded, args=(step, shards, metrics, t0),
+                daemon=True, name=f"mw-driver-{step}")
+            self._thread = th
+            th.start()
+        else:
+            self._save_all(step, shards, metrics, t0)
+            metrics.blocking_seconds = metrics.end_to_end_seconds
+        return metrics
+
+    def _run_guarded(self, step, shards, metrics, t0) -> None:
+        try:
+            self._save_all(step, shards, metrics, t0)
+        except BaseException as e:
+            self._error = e
+
+    def _save_all(self, step, shards, metrics, t0) -> None:
+        n = self.num_ranks
+
+        def save_rank(r: int):
+            try:
+                return self.managers[r].save(
+                    step, shards[r], rank=r, num_ranks=n)
+            except BaseException:
+                self.group.abort()   # unblock peers stuck on a barrier
+                raise
+
+        outs, errs = _fanout(n, save_rank, f"mw-rank-{step}")
+        if any(errs):
+            self.group.reset()       # repair the barrier for the next save
+            self.coordinator.discard(step)   # stale staging must not commit
+            primary = next((e for e in errs
+                            if not isinstance(e, MultiWriterAborted)),
+                           next(e for e in errs if e is not None))
+            raise RuntimeError(
+                f"multi-writer save of step {step} failed") from primary
+        metrics.per_rank = [m for m in outs]
+        metrics.total_bytes = sum(m.total_bytes for m in outs)
+        metrics.end_to_end_seconds = time.perf_counter() - t0
+
+    def wait_snapshotted(self) -> None:
+        """No-op barrier: ``save`` partitions (async: deep-copies) every
+        payload on the blocking path, so the snapshot is stable the moment
+        it returns — callers may mutate or donate immediately."""
+
+    def wait(self) -> None:
+        """Block until an in-flight async multi-writer save committed."""
+        th = self._thread
+        if th is not None:
+            th.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async multi-writer save failed") from err
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        return self.managers[0].all_steps()
+
+    def latest_step(self) -> int | None:
+        return self.managers[0].latest_step()
+
+    @property
+    def last_restore_metrics(self):
+        return self.managers[0].last_restore_metrics
+
+    def restore(self, state_template=None, *, step: int | None = None, **kw):
+        """Single-reader restore of the merged checkpoint (full template /
+        sharding / elastic-mesh support of ``CheckpointManager.restore``)."""
+        self.wait()
+        return self.managers[0].restore(state_template, step=step, **kw)
+
+    def restore_sharded(self, num_ranks: int | None = None, *,
+                        step: int | None = None):
+        """Elastic N→M restore: M reader ranks, each materializing its
+        row-partition windows from whatever saved shards intersect them
+        (``WindowAssembler`` under the hood). Returns M pytrees whose tensor
+        leaves are ``LocalShard``s (replicated leaves come back whole).
+        Readers run concurrently — the restore-side contention scenario."""
+        self.wait()
+        m = num_ranks if num_ranks is not None else self.num_ranks
+        outs, errs = _fanout(m, lambda r: self._restore_rank(r, m, step),
+                             "mw-read-rank")
+        for e in errs:
+            if e is not None:
+                raise e
+        return outs
+
+    def _restore_rank(self, rank: int, num_ranks: int, step: int | None):
+        windows: dict[str, tuple] = {}   # key -> (window, global_shape)
+
+        def window_fn(rec):
+            gs = tuple(rec.global_shape)
+            if len(gs) == 0 or gs[0] < num_ranks:
+                w = tuple((0, d) for d in gs)    # replicated: full window
+            else:
+                lo, hi = partition_spans(gs[0], num_ranks)[rank]
+                w = ((lo, hi),) + tuple((0, d) for d in gs[1:])
+            windows[rec.key] = (w, gs)
+            return [(w, None)]
+
+        # reader ranks beyond the writer count get a fresh manager/engine
+        # pair (M > N); writer ranks reuse their own (restores don't touch
+        # the coordinator)
+        if rank < len(self.managers):
+            mgr, temp = self.managers[rank], False
+        else:
+            mgr, temp = CheckpointManager(
+                self.directory, engine=self.engine_name,
+                config=replace(self._base_config), async_save=False,
+                verify_crc=self.managers[0].verify_crc,
+                streaming=self.managers[0].streaming), True
+        try:
+            tree = mgr.restore(step=step, window_fn=window_fn)
+        finally:
+            if temp:
+                mgr.close()
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        for path, leaf in flat:
+            info = windows.get(path_str(path))
+            if info is None or not isinstance(leaf, np.ndarray):
+                leaves.append(leaf)
+                continue
+            w, gs = info
+            if w == tuple((0, d) for d in gs):
+                leaves.append(leaf)              # replicated: whole tensor
+            else:
+                leaves.append(LocalShard(leaf, w, gs))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # --------------------------------------------------------------- plumbing
+    def close(self) -> None:
+        self.wait()
+        for mgr in self.managers:
+            mgr.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

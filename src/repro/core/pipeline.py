@@ -51,8 +51,8 @@ import numpy as np
 from .engines import ReadReq, SaveSpec
 from .manifest import Manifest, TensorRecord
 from .resharding import WindowAssembler, normalize_index, record_dtype
-from .serialization import (LEAN_KEY, as_bytes_view, tensor_nbytes,
-                            to_numpy_view)
+from .serialization import (LEAN_KEY, LocalShard, as_bytes_view,
+                            tensor_nbytes, to_numpy_view)
 
 
 @dataclass
@@ -69,7 +69,10 @@ def iter_host_shards(t):
     (``PendingPut.resolve``) so the D2H lands directly in staging order.
     DP replicas are deduplicated by ``replica_id == 0``.
     """
-    if isinstance(t, jax.Array) and hasattr(t, "addressable_shards"):
+    if isinstance(t, LocalShard):
+        # multi-writer rank leaf: the window was declared by the caller
+        yield t.data, normalize_index(t.index, t.global_shape)
+    elif isinstance(t, jax.Array) and hasattr(t, "addressable_shards"):
         for sh in t.addressable_shards:
             if sh.replica_id != 0:
                 continue  # DP replica dedup

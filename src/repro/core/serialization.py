@@ -27,6 +27,37 @@ class TensorStub:
     prng_impl: str | None = None
 
 
+@dataclass(frozen=True)
+class LocalShard:
+    """A rank-local window of a global tensor (multi-writer leaf).
+
+    Looks like a tensor whose ``.shape`` is the GLOBAL shape while holding
+    only this rank's ``data`` covering ``index`` (global (start, stop) per
+    dim). The save path records the window in the manifest exactly as it
+    does for an addressable shard of a sharded ``jax.Array`` — this is how
+    an in-process writer rank declares ownership without a multi-host mesh.
+    """
+    data: np.ndarray
+    index: tuple[tuple[int, int], ...]
+    global_shape: tuple[int, ...]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.global_shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def ndim(self) -> int:
+        return len(self.global_shape)
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes
+
+
 def path_str(path) -> str:
     """Stable string form of a jax key path."""
     parts = []
@@ -43,7 +74,7 @@ def path_str(path) -> str:
 
 
 def _is_tensor(x) -> bool:
-    return isinstance(x, (jax.Array, np.ndarray))
+    return isinstance(x, (jax.Array, np.ndarray, LocalShard))
 
 
 def _is_typed_prng(x) -> bool:

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CheckpointManager, EngineConfig, MultiLevelCheckpointer
+from repro.core import (CheckpointManager, EngineConfig,
+                        MultiLevelCheckpointer, MultiWriterCheckpointer)
 from repro.data import DataConfig, SyntheticPipeline
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
@@ -39,6 +40,9 @@ class TrainerConfig:
     async_ckpt: bool = True
     streaming_ckpt: bool = True          # SnapshotPipeline save path
     multilevel_remote: str = ""          # non-empty enables two-level C/R
+    ckpt_writers: int = 0                # >1: in-process N-rank concurrent
+                                         # writers + rank-0 merge commit
+                                         # (DESIGN.md §11)
     keep: int = 3
     log_every: int = 10
     seed: int = 0
@@ -59,11 +63,25 @@ class Trainer:
             frontend_dim=cfg.frontend_dim)
         self.pipeline = SyntheticPipeline(
             self.data_cfg, jax.process_index(), jax.process_count())
+        if tcfg.multilevel_remote and tcfg.ckpt_writers > 1:
+            raise ValueError(
+                "multilevel_remote and ckpt_writers > 1 are mutually "
+                "exclusive: the two-level flusher wraps a single manager")
         if tcfg.multilevel_remote:
             self.ckpt = MultiLevelCheckpointer(
                 tcfg.ckpt_dir, tcfg.multilevel_remote,
                 engine=tcfg.ckpt_engine, config=engine_config,
                 async_save=False, keep=tcfg.keep,
+                streaming=tcfg.streaming_ckpt)
+        elif tcfg.ckpt_every and tcfg.ckpt_writers > 1:
+            # N concurrent writer ranks over one directory: the state is
+            # row-partitioned per save, every rank flushes its windows, and
+            # rank 0 merge-commits the step (restore is elastic: any later
+            # run - multi-writer or not - reads the merged manifest)
+            self.ckpt = MultiWriterCheckpointer(
+                tcfg.ckpt_dir, tcfg.ckpt_writers,
+                engine=tcfg.ckpt_engine, config=engine_config,
+                async_save=tcfg.async_ckpt, keep=tcfg.keep,
                 streaming=tcfg.streaming_ckpt)
         elif tcfg.ckpt_every:
             self.ckpt = CheckpointManager(

@@ -64,15 +64,23 @@ def test_versioning_and_gc(tmp_ckpt_dir):
 
 
 def test_crash_leaves_no_valid_partial(tmp_ckpt_dir):
-    """A .tmp dir (simulated crash) must be invisible and GC'd."""
+    """A .tmp dir (simulated crash) must be invisible and GC'd.
+
+    Every save stamps its staging dir with an ownership pidfile
+    (checkpoint.OWNER_NAME), so a crashed process leaves a dir owned by a
+    dead pid — which GC reaps. (A LIVE owner's dir is spared; that race is
+    covered in test_multiwriter.)"""
+    from repro.core.checkpoint import OWNER_NAME
     state = _state()
     with CheckpointManager(tmp_ckpt_dir) as mgr:
         mgr.save(1, state)
-    # simulate a crashed save: a stale tmp dir with data but no manifest
+    # simulate a crashed save: a tmp dir with data whose owner pid is dead
     crash = os.path.join(tmp_ckpt_dir, "step_00000002.tmp-dead")
     os.makedirs(os.path.join(crash, "data"))
     with open(os.path.join(crash, "data", "junk.bin"), "wb") as f:
         f.write(b"x" * 100)
+    with open(os.path.join(crash, OWNER_NAME), "w") as f:
+        f.write(f"{2**30} 0")
     with CheckpointManager(tmp_ckpt_dir) as mgr2:
         assert mgr2.all_steps() == [1]          # tmp not listed
         assert not glob.glob(os.path.join(tmp_ckpt_dir, "*.tmp-*"))  # GC'd

@@ -4,7 +4,8 @@ import os
 
 import pytest
 
-from repro.core.manifest import (BlobRecord, Manifest, ShardEntry,
+from repro.core.manifest import (BlobRecord, Manifest, ManifestError,
+                                 ManifestMergeError, ShardEntry,
                                  TensorRecord, crc32_of)
 
 
@@ -48,6 +49,101 @@ def test_merge():
                 ShardEntry(((0, 4),), "data/c.bin", 9000, 8))
     a.merge(b)
     assert set(a.tensors) == {"w", "v"}
+
+
+def test_merge_rejects_mismatched_step():
+    a = _manifest()
+    b = Manifest(step=8, num_ranks=2, strategy="single_file")
+    with pytest.raises(ManifestMergeError):
+        a.merge(b)
+
+
+def test_merge_rejects_mismatched_strategy():
+    a = _manifest()
+    b = Manifest(step=7, num_ranks=2, strategy="file_per_process")
+    with pytest.raises(ManifestMergeError):
+        a.merge(b)
+
+
+def test_merge_rejects_mismatched_global_shape():
+    a = _manifest()
+    b = Manifest(step=7, num_ranks=2, strategy="single_file")
+    b.add_shard("w", "float32", (16, 8),
+                ShardEntry(((8, 16), (0, 8)), "data/d.bin", 0, 256))
+    with pytest.raises(ManifestMergeError):
+        a.merge(b)
+    c = Manifest(step=7, num_ranks=2, strategy="single_file")
+    c.add_shard("w", "int8", (8, 8),
+                ShardEntry(((0, 8), (0, 8)), "data/d.bin", 0, 64))
+    with pytest.raises(ManifestMergeError):
+        a.merge(c)
+
+
+def test_merge_same_rank_idempotent():
+    """Re-merging a rank (retried commit) must not duplicate ShardEntrys —
+    duplicates corrupt restore windows."""
+    a = _manifest()
+    a.extra["rank"] = 0
+    b = Manifest(step=7, num_ranks=2, strategy="single_file")
+    b.extra["rank"] = 1
+    b.add_shard("v", "bfloat16", (4,),
+                ShardEntry(((0, 4),), "data/c.bin", 9000, 8))
+    a.merge(b)
+    n = len(a.tensors["v"].shards)
+    a.merge(b)                       # rank recorded: whole merge is a no-op
+    a.merge(b, rank=1)               # explicit rank: same
+    assert len(a.tensors["v"].shards) == n
+    assert sorted(a.extra["merged_ranks"]) == [0, 1]
+
+
+def test_failed_merge_leaves_target_unmodified():
+    """A merge that raises must not half-apply NOR mark the rank merged —
+    otherwise a retry would no-op and silently drop shards."""
+    a = _manifest()
+    b = Manifest(step=7, num_ranks=2, strategy="single_file")
+    b.extra["rank"] = 1
+    b.add_shard("v", "bfloat16", (4,),
+                ShardEntry(((0, 4),), "data/c.bin", 9000, 8))
+    b.add_shard("w", "int8", (8, 8),                    # conflicts with a
+                ShardEntry(((0, 8), (0, 8)), "x", 0, 64))
+    with pytest.raises(ManifestMergeError):
+        a.merge(b)
+    assert 1 not in a.extra.get("merged_ranks", [])
+    assert "v" not in a.tensors
+    # fix b's conflict: the retry now merges completely
+    del b.tensors["w"]
+    a.merge(b)
+    assert "v" in a.tensors and 1 in a.extra["merged_ranks"]
+
+
+def test_merge_duplicate_entries_skipped_without_rank():
+    """Even rank-less manifests (legacy) dedupe exact-identical entries."""
+    a = _manifest()
+    b = Manifest.loads(_manifest().dumps())
+    before = len(a.tensors["w"].shards)
+    a.merge(b)
+    assert len(a.tensors["w"].shards) == before
+
+
+def test_loads_corrupt_raises_typed():
+    for blob in (b"", b"{", b'{"step": 1}', b"\x00\xff garbage"):
+        with pytest.raises(ManifestError):
+            Manifest.loads(blob)
+
+
+def test_load_missing_raises_typed(tmp_path):
+    with pytest.raises(ManifestError):
+        Manifest.load(str(tmp_path))
+
+
+def test_rank_manifest_roundtrip(tmp_path):
+    d = str(tmp_path)
+    m = _manifest()
+    m.save_rank(d, 3)
+    assert not Manifest.exists(d)        # rank manifests don't commit
+    assert Manifest.rank_manifests(d) == [3]
+    m2 = Manifest.load_rank(d, 3)
+    assert m2.dumps() == m.dumps()
 
 
 def test_inconsistent_record_rejected():

@@ -1,0 +1,313 @@
+"""Multi-writer checkpointing: N concurrent rank writers, two-phase rank-0
+merge commit, crash-window publish, corrupt-manifest fallback, tmp-GC
+ownership, and N→M elastic restore (DESIGN.md §11)."""
+
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, EngineConfig, LocalShard,
+                        Manifest, ManifestError, MultiWriterCheckpointer,
+                        shard_state)
+from repro.core.checkpoint import (OWNER_NAME, step_dir_name, tmp_in_flight,
+                                   write_owner)
+from repro.core.multiwriter import InProcessGroup, MultiWriterAborted
+
+
+def _state(seed=0, rows=16, cols=32):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": rng.standard_normal((rows, cols))
+                       .astype(np.float32),
+                       "b": rng.standard_normal((3,)).astype(np.float32)},
+            "step": seed, "note": f"lean-{seed}"}
+
+
+def _reassemble(trees, key, like):
+    out = np.zeros_like(like)
+    for tree in trees:
+        leaf = tree["params"][key]
+        if isinstance(leaf, LocalShard):
+            lo, hi = leaf.index[0]
+            out[lo:hi] = leaf.data
+        else:
+            out[:] = leaf
+    return out
+
+
+# ------------------------------------------------------------ group shim
+def test_allgather_rounds():
+    group = InProcessGroup(4)
+    results = [None] * 4
+
+    def run(r):
+        a = group.allgather(r * 10, r, 4)
+        b = group.allgather(r + 100, r)
+        results[r] = (a, b)
+
+    ts = [threading.Thread(target=run, args=(r,)) for r in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    for r in range(4):
+        assert results[r] == ([0, 10, 20, 30], [100, 101, 102, 103])
+
+
+def test_allgather_rejects_wrong_world_size():
+    group = InProcessGroup(1)
+    with pytest.raises(ValueError):
+        group.allgather(1, 0, 8)
+
+
+# -------------------------------------------------- concurrent save+commit
+@pytest.mark.parametrize("strategy", ["single_file", "file_per_process",
+                                      "file_per_tensor"])
+def test_concurrent_save_one_commit(tmp_ckpt_dir, strategy):
+    """N rank threads, one shared dir → exactly ONE committed step dir with
+    a merged manifest; every rank's windows present."""
+    state = _state(1)
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 4,
+            config=EngineConfig(strategy=strategy)) as mw:
+        mw.save(3, state)
+        assert sorted(os.listdir(tmp_ckpt_dir)) == [step_dir_name(3)]
+        step_dir = os.path.join(tmp_ckpt_dir, step_dir_name(3))
+        man = Manifest.load(step_dir)
+        assert man.num_ranks == 4
+        assert sorted(man.extra["merged_ranks"]) == [0, 1, 2, 3]
+        assert Manifest.rank_manifests(step_dir) == [0, 1, 2, 3]
+        # the 16-row tensor was split 4 ways: 4 disjoint windows
+        idx = sorted(tuple(s.index) for s in man.tensors["params/w"].shards)
+        assert idx == [(((0, 4), (0, 32))), (((4, 8), (0, 32))),
+                       (((8, 12), (0, 32))), (((12, 16), (0, 32)))]
+        out = mw.restore()
+    np.testing.assert_array_equal(out["params"]["w"], state["params"]["w"])
+    np.testing.assert_array_equal(out["params"]["b"], state["params"]["b"])
+    assert out["note"] == "lean-1"
+
+
+def test_single_file_disjoint_regions(tmp_ckpt_dir):
+    """SINGLE_FILE: ranks write disjoint extents of ONE shared file (the
+    prefix-sum exchange ran through the in-process allgather)."""
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 4,
+            config=EngineConfig(strategy="single_file")) as mw:
+        mw.save(1, _state(1))
+        man = Manifest.load(os.path.join(tmp_ckpt_dir, step_dir_name(1)))
+    paths = {s.path for r in man.tensors.values() for s in r.shards}
+    paths |= {b.path for b in man.blobs.values()}
+    assert paths == {"data/checkpoint.bin"}
+    spans = sorted((s.offset, s.offset + s.nbytes)
+                   for r in man.tensors.values() for s in r.shards)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, f"overlapping extents {a0, a1} and {b0, b1}"
+
+
+def test_elastic_restore_n_to_m(tmp_ckpt_dir):
+    """A 4-rank checkpoint restores bit-identically on 1/2/3/8-rank meshes
+    (windows assembled from whatever saved shards they intersect)."""
+    state = _state(5)
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 4,
+            config=EngineConfig(strategy="single_file")) as mw:
+        mw.save(2, state)
+        for m_ranks in (1, 2, 3, 8):
+            trees = mw.restore_sharded(m_ranks, step=2)
+            assert len(trees) == m_ranks
+            got = _reassemble(trees, "w", state["params"]["w"])
+            np.testing.assert_array_equal(got, state["params"]["w"])
+            got_b = _reassemble(trees, "b", state["params"]["b"])
+            np.testing.assert_array_equal(got_b, state["params"]["b"])
+
+
+def test_multiwriter_async_and_overwrite(tmp_ckpt_dir):
+    """Async driver: save returns early, wait() commits; re-saving the same
+    step replaces it atomically."""
+    s1, s2 = _state(1), _state(2)
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 2, async_save=True,
+            config=EngineConfig(strategy="single_file")) as mw:
+        m = mw.save(9, s1)
+        assert m.mode == "async"
+        mw.wait()
+        assert m.total_bytes > 0 and m.end_to_end_seconds > 0
+        mw.save(9, s2)
+        mw.wait()
+        out = mw.restore(step=9)
+    np.testing.assert_array_equal(out["params"]["w"], s2["params"]["w"])
+    assert sorted(os.listdir(tmp_ckpt_dir)) == [step_dir_name(9)]
+
+
+def test_rank_failure_aborts_group_not_hangs(tmp_ckpt_dir):
+    """A failing rank breaks the barrier: peers get MultiWriterAborted
+    instead of hanging, nothing is committed, and the NEXT save works."""
+    state = _state(3)
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 3,
+            config=EngineConfig(strategy="single_file")) as mw:
+        def boom(*a, **kw):
+            raise IOError("injected rank-1 flush failure")
+        mw.managers[1].engine.begin_save = boom
+        with pytest.raises(RuntimeError) as ei:
+            mw.save(1, state)
+        assert isinstance(ei.value.__cause__, IOError)
+        assert mw.latest_step() is None   # nothing committed
+        del mw.managers[1].engine.begin_save   # restore class method
+        mw.save(2, state)                 # barrier was repaired
+        out = mw.restore()
+    np.testing.assert_array_equal(out["params"]["w"], state["params"]["w"])
+
+
+def test_rank0_commit_failure_reclaims_staging(tmp_ckpt_dir):
+    """A phase-2 (rank-0 publish) failure must leave no staging dir behind
+    and must not poison the next save of the same step."""
+    state = _state(6)
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 2,
+            config=EngineConfig(strategy="single_file")) as mw:
+        def boom(tmp, step):
+            raise OSError("injected publish failure")
+        mw.managers[0]._publish = boom
+        with pytest.raises(RuntimeError):
+            mw.save(4, state)
+        assert not any(".tmp-" in n for n in os.listdir(tmp_ckpt_dir))
+        del mw.managers[0]._publish
+        mw.save(4, state)
+        out = mw.restore(step=4)
+    np.testing.assert_array_equal(out["params"]["w"], state["params"]["w"])
+
+
+def test_shard_state_replication_and_snapshot():
+    state = {"big": np.arange(12, dtype=np.float32).reshape(6, 2),
+             "small": np.arange(2, dtype=np.float32),
+             "scalar": np.float32(3.0), "lean": "x"}
+    shards = shard_state(state, 4, snapshot=True)
+    assert len(shards) == 4
+    assert isinstance(shards[0]["big"], LocalShard)
+    assert shards[0]["big"].global_shape == (6, 2)
+    # 6 rows over 4 ranks: (2, 2, 1, 1), contiguous and covering
+    spans = [s["big"].index[0] for s in shards]
+    assert spans == [(0, 2), (2, 4), (4, 5), (5, 6)]
+    # short tensors replicated, snapshot copies detached from the source
+    assert isinstance(shards[1]["small"], np.ndarray)
+    state["small"][0] = 99.0
+    assert shards[1]["small"][0] == 0.0
+
+
+# --------------------------------------------------- crash-window publish
+def test_commit_crash_window_keeps_previous(tmp_ckpt_dir, monkeypatch):
+    """Crash between displacing the old step dir and renaming the new one
+    in must NOT lose the previous checkpoint: restart recovers it."""
+    s1, s2 = _state(1), _state(2)
+    with CheckpointManager(tmp_ckpt_dir) as mgr:
+        mgr.save(5, s1)
+    final = os.path.join(tmp_ckpt_dir, step_dir_name(5))
+
+    real_replace = os.replace
+
+    def crashy(src, dst, *a, **kw):
+        if dst == final and ".tmp-" in src and ".tmp-old-" not in src:
+            raise RuntimeError("simulated crash mid-publish")
+        return real_replace(src, dst, *a, **kw)
+
+    monkeypatch.setattr(os, "replace", crashy)
+    mgr2 = CheckpointManager(tmp_ckpt_dir)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        mgr2.save(5, s2)
+    mgr2.close()
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    # "restart": a fresh manager's GC rolls the displaced version back
+    with CheckpointManager(tmp_ckpt_dir) as mgr3:
+        assert mgr3.all_steps() == [5]
+        out = mgr3.restore(step=5)
+    np.testing.assert_array_equal(out["params"]["w"], s1["params"]["w"])
+
+
+# --------------------------------------------- corrupt-manifest fallback
+def test_corrupt_manifest_falls_back_to_older_step(tmp_ckpt_dir):
+    s1, s2 = _state(1), _state(2)
+    with CheckpointManager(tmp_ckpt_dir) as mgr:
+        mgr.save(1, s1)
+        mgr.save(2, s2)
+        with open(os.path.join(tmp_ckpt_dir, step_dir_name(2),
+                               "manifest.json"), "wb") as f:
+            f.write(b'{"format_version": 2, "step"')   # truncated
+        # explicit step: typed error, no silent fallback
+        with pytest.raises(ManifestError):
+            mgr.restore(step=2)
+        # latest-step restore: falls back to the older valid step
+        out = mgr.restore()
+    np.testing.assert_array_equal(out["params"]["w"], s1["params"]["w"])
+    assert out["note"] == "lean-1"
+
+
+def test_all_manifests_corrupt_raises_typed(tmp_ckpt_dir):
+    with CheckpointManager(tmp_ckpt_dir) as mgr:
+        mgr.save(1, _state(1))
+        with open(os.path.join(tmp_ckpt_dir, step_dir_name(1),
+                               "manifest.json"), "wb") as f:
+            f.write(b"not json at all")
+        with pytest.raises(ManifestError):
+            mgr.restore()
+
+
+# ------------------------------------------------------- tmp GC ownership
+def test_gc_spares_live_tmp_dirs(tmp_ckpt_dir):
+    """A second manager starting up mid-flush must not reap a live save's
+    tmp dir (owner pid alive) nor a young ownerless one; stale dirs go."""
+    os.makedirs(tmp_ckpt_dir, exist_ok=True)
+    live = os.path.join(tmp_ckpt_dir, "step_00000001.tmp-live")
+    os.makedirs(live)
+    write_owner(live)                      # owned by THIS (alive) process
+    young = os.path.join(tmp_ckpt_dir, "step_00000002.tmp-young")
+    os.makedirs(young)                     # no owner, but brand new
+    stale = os.path.join(tmp_ckpt_dir, "step_00000003.tmp-stale")
+    os.makedirs(stale)
+    old = time.time() - 3600
+    os.utime(stale, (old, old))            # no owner, an hour old
+    dead = os.path.join(tmp_ckpt_dir, "step_00000004.tmp-dead")
+    os.makedirs(dead)
+    with open(os.path.join(dead, OWNER_NAME), "w") as f:
+        f.write(f"{2**30} 0")              # pid beyond pid_max: not alive
+    assert tmp_in_flight(live) and tmp_in_flight(young)
+    assert not tmp_in_flight(stale) and not tmp_in_flight(dead)
+
+    CheckpointManager(tmp_ckpt_dir).engine.close()
+    left = sorted(os.listdir(tmp_ckpt_dir))
+    assert "step_00000001.tmp-live" in left
+    assert "step_00000002.tmp-young" in left
+    assert "step_00000003.tmp-stale" not in left
+    assert "step_00000004.tmp-dead" not in left
+
+
+def test_tmp_owner_on_other_host_falls_back_to_age(tmp_path):
+    """A shared-FS dir owned by ANOTHER host: its pids mean nothing to this
+    kernel, so liveness falls back to the age signal."""
+    p = os.path.join(str(tmp_path), "step_00000001.tmp-remote")
+    os.makedirs(p)
+    with open(os.path.join(p, OWNER_NAME), "w") as f:
+        f.write(f"{os.getpid()} 0 some-other-host")   # pid alive HERE
+    assert tmp_in_flight(p)            # young: assumed live
+    old = time.time() - 3600
+    os.utime(p, (old, old))
+    assert not tmp_in_flight(p)        # aged out: reapable
+
+
+def test_concurrent_manager_startup_does_not_break_async_save(tmp_ckpt_dir):
+    """The race the guard exists for: a manager starts while another's
+    async save is mid-flight in the same directory — the save must still
+    commit."""
+    state = _state(4, rows=256, cols=512)
+    with CheckpointManager(tmp_ckpt_dir, async_save=True) as mgr:
+        mgr.save(1, state)
+        # second manager's __init__ runs _gc_tmp while the flush drains
+        CheckpointManager(tmp_ckpt_dir).engine.close()
+        mgr.wait()
+        assert mgr.latest_step() == 1
+        out = mgr.restore(step=1)
+    np.testing.assert_array_equal(out["params"]["w"], state["params"]["w"])

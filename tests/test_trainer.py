@@ -9,12 +9,13 @@ from repro.data import DataConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def _make(tmp, steps, ckpt_every, engine="aggregated", seed=0):
+def _make(tmp, steps, ckpt_every, engine="aggregated", seed=0, writers=0):
     cfg = get_config("qwen2.5-3b").scaled_down(layers=2, width_div=16,
                                                vocab=256)
     tcfg = TrainerConfig(steps=steps, ckpt_every=ckpt_every,
                          ckpt_dir=tmp, ckpt_engine=engine,
-                         async_ckpt=False, log_every=0, seed=seed)
+                         async_ckpt=False, log_every=0, seed=seed,
+                         ckpt_writers=writers)
     data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4,
                       seed=seed)
     return Trainer(cfg, tcfg, data_cfg=data)
@@ -58,3 +59,26 @@ def test_resume_across_engines(tmp_path, engine):
     out = t2.run()
     t2.close()
     assert int(out["state"]["step"]) == 5
+
+
+def test_resume_from_multiwriter_checkpoint(tmp_path):
+    """A 2-writer concurrent checkpoint resumes bit-exactly — on a
+    multi-writer trainer AND on a plain single-manager one (the merged
+    manifest is an ordinary checkpoint)."""
+    t_straight = _make(str(tmp_path / "a"), steps=6, ckpt_every=0)
+    out_a = t_straight.run()
+    t_straight.close()
+
+    t1 = _make(str(tmp_path / "b"), steps=3, ckpt_every=3, writers=2)
+    t1.run()
+    t1.close()
+    # resume WITHOUT multi-writer: any reader restores the merged step
+    t2 = _make(str(tmp_path / "b"), steps=6, ckpt_every=6, writers=0)
+    out_b = t2.run()
+    t2.close()
+
+    pa = jax.tree.leaves(out_a["state"]["params"])
+    pb = jax.tree.leaves(out_b["state"]["params"])
+    for a, b in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(out_b["state"]["step"]) == 6
