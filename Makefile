@@ -1,13 +1,16 @@
 PY ?= python
 
-.PHONY: verify test bench-smoke bench-restore-smoke bench-concurrency-smoke
+.PHONY: verify test bench-smoke bench-restore-smoke bench-concurrency-smoke \
+	bench-delta-smoke
 
-# The ROADMAP tier-1 gate plus the save-, restore-, and concurrency smoke
-# benchmarks: regressions in the test suite, pipelined blocking time,
-# streaming restore (wall-clock, staging bound, bit-identity), or the
+# The ROADMAP tier-1 gate plus the save-, restore-, concurrency, and delta
+# smoke benchmarks: regressions in the test suite, pipelined blocking time,
+# streaming restore (wall-clock, staging bound, bit-identity), the
 # multi-writer commit protocol (one committed dir, merged manifest,
-# elastic bit-identity) fail loudly.
-verify: test bench-smoke bench-restore-smoke bench-concurrency-smoke
+# elastic bit-identity), or delta checkpointing (1%-dirty save writes
+# <=10% of full bytes, bit-identical restore, refcount GC) fail loudly.
+verify: test bench-smoke bench-restore-smoke bench-concurrency-smoke \
+	bench-delta-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -20,3 +23,6 @@ bench-restore-smoke:
 
 bench-concurrency-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_concurrency --smoke
+
+bench-delta-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_delta --smoke

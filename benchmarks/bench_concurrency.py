@@ -17,16 +17,13 @@ violation — wired into ``make verify`` and CI.
 
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import sys
 
 import numpy as np
 
-from benchmarks.common import Report, fresh_dir
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from benchmarks.common import Report, fresh_dir, write_summary
 
 WRITERS = (1, 2, 4, 8)
 LAYOUTS = [
@@ -80,8 +77,7 @@ def run_sweep(rep: Report, smoke: bool) -> dict:
                 "aggregate_write_gbps": round(gbps, 4)}
             rep.add(config=f"{writers}w-{label}", seconds=best,
                     aggregate_gbps=gbps, state_mb=total >> 20)
-    with open(os.path.join(ROOT, "BENCH_concurrency.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    write_summary("concurrency", out)
     print(f"  -> BENCH_concurrency.json: {len(out['cells'])} cells, "
           f"{total >> 20} MB state")
     return out

@@ -1,0 +1,177 @@
+"""Content-addressed delta checkpointing sweep (DESIGN.md §12).
+
+Sweeps dirty fraction ∈ {100%, 50%, 10%, 1%} × layout ∈ {file-per-tensor,
+file-per-rank, single-file} through a ``delta=True`` CheckpointManager: step
+0 is the full save (every chunk dirty by construction), then each following
+step mutates a contiguous ``frac`` of every tensor's rows and saves again.
+Recorded per cell: logical bytes actually written (``SaveMetrics.
+written_bytes``), the written fraction vs the full save, end-to-end save
+seconds, and the worker-side hash/diff seconds — the paper's *volume* axis
+should scale with the dirty fraction while restore stays bit-identical.
+
+``--smoke`` shrinks the state and gates on the §12 acceptance criteria:
+  · the 1%-dirty single-file save writes ≤ 10% of the full save's bytes,
+  · the streaming restore of the delta step is bit-identical to a full
+    (non-delta) save's restore of the same state,
+  · after retention drops old steps, the refcount GC reaps unreferenced
+    packs but every kept step still restores bit-exactly.
+Exits nonzero on any violation — wired into ``make verify`` and CI.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+
+import numpy as np
+
+from benchmarks.common import Report, fresh_dir, write_summary
+
+FRACTIONS = (1.0, 0.5, 0.1, 0.01)
+LAYOUTS = [
+    ("file-per-tensor", "file_per_tensor"),
+    ("file-per-rank", "file_per_process"),
+    ("single-file", "single_file"),
+]
+
+
+def _state(n_tensors: int, rows: int, cols: int) -> dict:
+    rng = np.random.default_rng(12)
+    return {"params": {
+        f"w{i}": rng.standard_normal((rows, cols)).astype(np.float32)
+        for i in range(n_tensors)}, "step": 0}
+
+
+def _total_bytes(state) -> int:
+    return sum(a.nbytes for a in state["params"].values())
+
+
+def _mutate(state, frac: float, rep: int) -> None:
+    """Touch a contiguous ``frac`` of every tensor's rows, offset per rep so
+    consecutive saves dirty different chunks."""
+    for a in state["params"].values():
+        rows = a.shape[0]
+        n = max(1, int(rows * frac))
+        off = (rep * 7919) % max(rows - n, 1)
+        a[off:off + n] += 1.0
+    state["step"] = rep
+
+
+def run_sweep(rep_log: Report, smoke: bool) -> dict:
+    from repro.core import CheckpointManager, EngineConfig
+
+    # tensors must dwarf the chunk grid for the 1% cell to be meaningful:
+    # a 1% contiguous span can dirty at most span//chunk + 2 chunks
+    n_tensors = 4
+    rows = 2048 if smoke else 6144
+    cols = 1024
+    reps = 2 if smoke else 3
+    out = {"chunk_bytes": 256 << 10, "reps": reps, "cells": {}}
+
+    for label, strategy in LAYOUTS:
+        for frac in FRACTIONS:
+            state = _state(n_tensors, rows, cols)
+            total = _total_bytes(state)
+            out["state_bytes"] = total
+            d = fresh_dir(f"delta_{strategy}_{int(frac * 100)}")
+            cfg = EngineConfig(strategy=strategy)
+            with CheckpointManager(d, config=cfg, delta=True,
+                                   keep=None) as mgr:
+                full = mgr.save(0, state)
+                best_written, best_s, best_hash = float("inf"), \
+                    float("inf"), float("inf")
+                for r in range(1, reps + 1):
+                    _mutate(state, frac, r)
+                    os.sync()
+                    m = mgr.save(r, state)
+                    best_written = min(best_written, m.written_bytes)
+                    best_s = min(best_s, m.end_to_end_seconds)
+                    best_hash = min(best_hash, m.hash_seconds)
+            wf = best_written / full.written_bytes
+            out["cells"][f"{int(frac * 100)}%x{label}"] = {
+                "dirty_fraction": frac, "layout": label,
+                "full_written_bytes": full.written_bytes,
+                "written_bytes": best_written,
+                "written_fraction": round(wf, 4),
+                "save_seconds": round(best_s, 6),
+                "hash_seconds": round(best_hash, 6)}
+            rep_log.add(config=f"{int(frac * 100)}%-{label}",
+                        written_mb=best_written / 1e6, written_frac=wf,
+                        save_s=best_s, hash_s=best_hash,
+                        state_mb=total >> 20)
+    write_summary("delta", out)
+    print(f"  -> BENCH_delta.json: {len(out['cells'])} cells, "
+          f"{out['state_bytes'] >> 20} MB state")
+    return out
+
+
+def check_gates(smoke: bool) -> list[str]:
+    """The §12 acceptance experiment (always run; sized small)."""
+    from repro.core import CheckpointManager, EngineConfig
+
+    errors: list[str] = []
+    state = _state(4, 2048, 1024)          # 32 MB, 128 chunks of 256 KiB
+    # fresh_dir purges the whole scratch: one call, then a sibling dir
+    d = fresh_dir("delta_gate")
+    d_full = os.path.join(os.path.dirname(d), "delta_gate_full")
+    os.makedirs(d_full, exist_ok=True)
+
+    cfg = EngineConfig(strategy="single_file")
+    with CheckpointManager(d, config=cfg, delta=True, keep=2) as mgr:
+        mgr.delta_gc_grace_s = 0.0
+        full = mgr.save(0, state)
+        _mutate(state, 0.01, 1)
+        m1 = mgr.save(1, state)
+        ratio = m1.written_bytes / full.written_bytes
+        if ratio > 0.10:
+            errors.append(f"1%-dirty save wrote {ratio:.1%} of full bytes "
+                          f"(gate: <=10%)")
+        # bit-identity: delta-step restore == full-save restore of same state
+        with CheckpointManager(d_full, config=EngineConfig(
+                strategy="single_file")) as ref:
+            ref.save(1, state)
+            want = ref.restore(step=1)
+        got = mgr.restore(step=1)
+        for k in state["params"]:
+            if not np.array_equal(got["params"][k], want["params"][k]):
+                errors.append(f"delta restore of {k} differs from "
+                              f"full-save restore")
+        # retention GC: roll old steps out; kept steps must stay restorable
+        for r in range(2, 5):
+            _mutate(state, 0.01, r)
+            mgr.save(r, state)
+        kept = mgr.all_steps()
+        if kept != [3, 4]:
+            errors.append(f"keep=2 retained {kept}")
+        gc = mgr.last_gc_stats
+        if gc is None or gc.kept == 0:
+            errors.append("refcount GC never ran or pinned nothing")
+        try:
+            out = mgr.restore(step=kept[-1])
+            for k, v in state["params"].items():
+                if not np.array_equal(out["params"][k], v):
+                    errors.append(f"post-GC restore of {k} not bit-identical")
+        except Exception as e:  # noqa: BLE001 - gate must report, not die
+            errors.append(f"post-GC restore failed: {e!r}")
+    shutil.rmtree(d, ignore_errors=True)
+    shutil.rmtree(d_full, ignore_errors=True)
+    return errors
+
+
+def run(smoke: bool = False):
+    rep = Report("bench_delta")
+    run_sweep(rep, smoke=smoke)
+    errors = check_gates(smoke)
+    path = rep.save()
+    for e in errors:
+        print(f"SMOKE FAIL: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print("  delta gates: 1%-dirty <=10% bytes, bit-identical restore, "
+          "refcount GC keeps every referenced chunk")
+    return path
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -17,7 +17,6 @@ bit-identical state. Results land in repo-root ``BENCH_restore.json``
 
 from __future__ import annotations
 
-import json
 import multiprocessing as mp
 import os
 import queue
@@ -25,10 +24,10 @@ import sys
 import time
 import zlib
 
-from benchmarks.common import Report, drop_caches, fresh_dir, synthetic_layout
+from benchmarks.common import (Report, drop_caches, fresh_dir,
+                               synthetic_layout, write_summary)
 from benchmarks.crbench import bench_read, bench_write
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 # ------------------------------------------------------- part 1: allocation
@@ -180,8 +179,7 @@ def run_mode_comparison(rep: Report, smoke: bool = False) -> dict:
                               and mono["peak_staged_bytes"] >= total // 2)
     out["speedup_e2e"] = round(mono["wall_s"] / stream["wall_s"], 3) \
         if stream["wall_s"] else float("inf")
-    with open(os.path.join(ROOT, "BENCH_restore.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    write_summary("restore", out)
     print(f"  -> BENCH_restore.json: streaming {stream['wall_s'] * 1e3:.1f} "
           f"ms vs monolithic {mono['wall_s'] * 1e3:.1f} ms e2e "
           f"({out['speedup_e2e']}x); staged {stream['peak_staged_bytes'] >> 20}"

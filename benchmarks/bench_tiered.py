@@ -9,20 +9,17 @@ across PRs.
 
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import time
 
 import numpy as np
 
-from benchmarks.common import Report, fresh_dir
+from benchmarks.common import Report, fresh_dir, write_summary
 from repro.core import CheckpointManager, MultiLevelCheckpointer
 from repro.core.multilevel import _default_copy
 from repro.core.uring import probe_io_uring
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_tiered.json")
 
 
 def _state(total_bytes: int, rng) -> dict:
@@ -133,9 +130,8 @@ def run(full_scale: bool = False, quick: bool = False):
         "prefetch_restore_gbps": round(pf["read_gbps"], 4),
         "prefetch_promoted": pf["promoted"],
     }
-    with open(SUMMARY_PATH, "w") as f:
-        json.dump(summary, f, indent=1)
-    print(f"  summary -> {SUMMARY_PATH}: best {best_mode} "
+    summary_path = write_summary("tiered", summary)
+    print(f"  summary -> {summary_path}: best {best_mode} "
           f"{best_gbps:.2f} GB/s ({summary['best']['speedup_vs_shutil']}x "
           f"vs shutil)")
     return out

@@ -15,7 +15,6 @@ the end-to-end framing of the paper's motivating experiment.
 
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import sys
@@ -23,9 +22,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Report, SCRATCH, fresh_dir
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from benchmarks.common import Report, SCRATCH, fresh_dir, write_summary
 
 MODES = [
     ("blocking", dict(async_save=False, streaming=True)),
@@ -76,8 +73,7 @@ def run_mode_comparison(rep: Report, smoke: bool = False) -> dict:
     out["pipelined_vs_legacy_blocking_speedup"] = round(
         legacy / piped if piped else float("inf"), 2)
     out["pipelined_wins"] = piped < legacy
-    with open(os.path.join(ROOT, "BENCH_pipeline.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    write_summary("pipeline", out)
     print(f"  -> BENCH_pipeline.json: pipelined {piped * 1e3:.2f} ms vs "
           f"legacy-async {legacy * 1e3:.2f} ms blocking "
           f"({out['pipelined_vs_legacy_blocking_speedup']}x)")

@@ -18,9 +18,23 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(REPO_ROOT, "results")
 SCRATCH = os.environ.get("REPRO_BENCH_DIR", "/root/bench_scratch")
+
+
+def write_summary(tag: str, payload: dict) -> str:
+    """THE one code path for tracked benchmark summaries.
+
+    Every bench emits two artifacts: the per-row log (``Report.save`` →
+    ``results/<name>.json``) and a curated summary tracked at the repo root
+    as ``BENCH_<tag>.json`` so trajectories survive scratch cleanup. The
+    benches used to hand-roll the latter; route them all through here.
+    """
+    path = os.path.join(REPO_ROOT, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def drop_caches() -> bool:

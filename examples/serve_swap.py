@@ -9,6 +9,12 @@ batched generation requests across them, restoring ("swapping in") each model
 from its checkpoint on demand. Reports per-swap restore bandwidth per engine —
 the restore-path half of the paper's engine comparison.
 
+Part 2 is the delta-aware swap variant (DESIGN.md §12): the zoo is kept
+under ``delta=True`` managers, a served model is lightly fine-tuned (one
+embedding row block + the final norm), and the UPDATE is pushed back into
+the zoo as a delta save — only dirty chunks move, and the example reports
+per-swap bytes moved vs the full model image before re-serving it.
+
     PYTHONPATH=src python examples/serve_swap.py
 """
 
@@ -26,6 +32,7 @@ from repro.train.steps import init_train_state
 
 ROOT = "/tmp/repro_serve"
 ARCHS = ["qwen2.5-3b", "stablelm-3b", "gemma2-9b"]
+DELTA_CHUNK = 64 << 10   # reduced models are small; keep the grid fine
 
 
 def generate(cfg, params, prompt, steps=16):
@@ -46,15 +53,51 @@ def generate(cfg, params, prompt, steps=16):
     return jnp.concatenate(out, axis=1)
 
 
+def _light_update(params):
+    """Simulate a light fine-tune touching a sliver of the weights."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    touched = 0
+    for i, leaf in enumerate(flat):
+        if i in (0, len(flat) - 1) and hasattr(leaf, "shape") and leaf.ndim:
+            arr = np.asarray(leaf).copy()
+            n = max(1, arr.shape[0] // 16)
+            # += of an exactly-representable constant: changes bits even in
+            # bfloat16 (a tiny multiplicative nudge rounds away to identity)
+            arr[:n] += np.asarray(0.125, dtype=arr.dtype)
+            touched += arr[:n].nbytes
+            out.append(jnp.asarray(arr))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), touched
+
+
+def serve_one(arch, cfg, tmpl, rng):
+    t0 = time.perf_counter()
+    with CheckpointManager(f"{ROOT}/{arch}", delta=True, keep=2,
+                           delta_chunk_bytes=DELTA_CHUNK) as mgr:
+        params = mgr.restore(state_template={"params": tmpl})["params"]
+        swap_s = time.perf_counter() - t0
+        bw = mgr.last_restore_metrics.total_bytes / swap_s / 1e6
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 8)),
+                         jnp.int32)
+    toks = generate(cfg, params, prompt, steps=12)
+    print(f"{arch:14s} swap-in {swap_s*1e3:7.1f} ms ({bw:7.1f} MB/s)  "
+          f"generated {toks.shape[1]} tokens/req x{toks.shape[0]} reqs")
+    return params
+
+
 def main():
     shutil.rmtree(ROOT, ignore_errors=True)
-    # 1. checkpoint three models (the "model zoo" on slow storage)
+    # 1. checkpoint three models (the "model zoo" on slow storage, kept by
+    #    delta-aware managers so later updates move only dirty chunks)
     zoo = {}
     for arch in ARCHS:
         cfg = get_config(arch).scaled_down(layers=2, width_div=16, vocab=512)
         params = init_train_state(jax.random.key(hash(arch) % 2**31),
                                   cfg)["params"]
-        with CheckpointManager(f"{ROOT}/{arch}") as mgr:
+        with CheckpointManager(f"{ROOT}/{arch}", delta=True, keep=2,
+                               delta_chunk_bytes=DELTA_CHUNK) as mgr:
             mgr.save(0, {"params": params})
         zoo[arch] = (cfg, jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params))
@@ -62,20 +105,28 @@ def main():
 
     # 2. serve a stream of requests, swapping models in on demand
     rng = np.random.default_rng(0)
-    requests = [ARCHS[i % 3] for i in range(6)]
-    for arch in requests:
+    for arch in [ARCHS[i % 3] for i in range(6)]:
         cfg, tmpl = zoo[arch]
-        t0 = time.perf_counter()
-        with CheckpointManager(f"{ROOT}/{arch}") as mgr:
-            params = mgr.restore(state_template={"params": tmpl})["params"]
-            swap_s = time.perf_counter() - t0
-            bw = mgr.last_restore_metrics.total_bytes / swap_s / 1e6
-        prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 8)),
-                             jnp.int32)
-        toks = generate(cfg, params, prompt, steps=12)
-        print(f"{arch:14s} swap-in {swap_s*1e3:7.1f} ms ({bw:7.1f} MB/s)  "
-              f"generated {toks.shape[1]} tokens/req x{toks.shape[0]} reqs")
+        serve_one(arch, cfg, tmpl, rng)
     print("serving with model swap ✓")
+
+    # 3. delta-aware re-swap: lightly fine-tune a served model and push the
+    #    UPDATE back into the zoo — only dirty chunks move
+    print("\ndelta update + re-swap (bytes moved per update):")
+    for arch in ARCHS:
+        cfg, tmpl = zoo[arch]
+        with CheckpointManager(f"{ROOT}/{arch}", delta=True, keep=2,
+                               delta_chunk_bytes=DELTA_CHUNK) as mgr:
+            params = mgr.restore(state_template={"params": tmpl})["params"]
+            params, touched = _light_update(params)
+            m = mgr.save(1, {"params": params})
+            print(f"{arch:14s} touched {touched/1e3:7.1f} KB -> moved "
+                  f"{m.written_bytes/1e3:8.1f} KB of "
+                  f"{m.total_bytes/1e6:6.2f} MB model "
+                  f"({m.written_bytes/m.total_bytes:6.1%}; "
+                  f"{m.chunks_dirty}/{m.chunks_total} chunks)")
+        serve_one(arch, cfg, tmpl, rng)   # re-swap the updated model
+    print("delta-aware model swap ✓")
 
 
 if __name__ == "__main__":

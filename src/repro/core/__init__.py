@@ -7,6 +7,7 @@ Layers (bottom-up):
   aggregation  file-per-tensor / file-per-process / single-file planners
   manifest     tensor→extent metadata with global shard indices
   engines      aggregated (ours) + datastates/snapshot/torchsave baselines
+  delta        content-addressed chunk store: dirty-extent saves, refcount GC
   checkpoint   CheckpointManager: async save, atomic commit, elastic restore
   multiwriter  N concurrent writer ranks, two-phase rank-0 merge commit
   tiered       tier-to-tier transfer engine: extent-hedged flush + prefetch
@@ -17,13 +18,15 @@ from .aggregation import (ObjectSpec, Strategy, coalesce, partition_spans,
                           plan_layout)
 from .buffers import AlignedBuffer, BufferPool, PAGE
 from .checkpoint import CheckpointManager, SaveMetrics, RestoreMetrics
+from .delta import (DeltaIndex, DeltaPlan, StoreGCStats, gc_store,
+                    plan_delta)
 from .engines import (AggregatedEngine, ChecksumError, CREngine,
                       DataStatesEngine, EngineConfig, ReadReq, ReadStream,
                       SaveItem, SaveSpec, SaveStream, SnapshotEngine,
                       TorchSaveEngine, make_cr_engine)
 from .io_engine import (IOEngine, IORequest, PosixEngine, ThreadPoolEngine,
                         UringEngine, make_engine, open_for)
-from .manifest import (Manifest, ManifestError, ManifestMergeError,
+from .manifest import (ChunkRef, Manifest, ManifestError, ManifestMergeError,
                        ShardEntry, TensorRecord)
 from .multilevel import FlushStats, MultiLevelCheckpointer
 from .multiwriter import (CommitCoordinator, InProcessGroup, LocalShard,
@@ -36,17 +39,18 @@ from .uring import IoUring, probe_io_uring
 
 __all__ = [
     "AggregatedEngine", "AlignedBuffer", "BufferPool", "CREngine",
-    "CheckpointManager", "ChecksumError", "CommitCoordinator",
-    "DataStatesEngine", "EngineConfig", "FlushStats", "IOEngine",
-    "IORequest", "InProcessGroup", "IoUring", "LocalShard", "Manifest",
-    "ManifestError", "ManifestMergeError", "MultiLevelCheckpointer",
-    "MultiSaveMetrics", "MultiWriterAborted", "MultiWriterCheckpointer",
-    "ObjectSpec", "PAGE", "PendingPut", "PosixEngine", "ReadReq",
-    "ReadStream", "RestoreMetrics", "RestorePipeline", "RestorePrefetcher",
-    "RestoreTask", "SaveItem", "SaveMetrics", "SaveSpec", "SaveStream",
-    "ShardEntry", "SnapshotEngine", "SnapshotPipeline", "Strategy",
-    "TensorRecord", "ThreadPoolEngine", "TieredTransferEngine",
-    "TorchSaveEngine", "TransferStats", "UringEngine", "build_save_puts",
-    "coalesce", "make_cr_engine", "make_engine", "open_for",
-    "partition_spans", "plan_layout", "probe_io_uring", "shard_state",
+    "CheckpointManager", "ChecksumError", "ChunkRef", "CommitCoordinator",
+    "DataStatesEngine", "DeltaIndex", "DeltaPlan", "EngineConfig",
+    "FlushStats", "IOEngine", "IORequest", "InProcessGroup", "IoUring",
+    "LocalShard", "Manifest", "ManifestError", "ManifestMergeError",
+    "MultiLevelCheckpointer", "MultiSaveMetrics", "MultiWriterAborted",
+    "MultiWriterCheckpointer", "ObjectSpec", "PAGE", "PendingPut",
+    "PosixEngine", "ReadReq", "ReadStream", "RestoreMetrics",
+    "RestorePipeline", "RestorePrefetcher", "RestoreTask", "SaveItem",
+    "SaveMetrics", "SaveSpec", "SaveStream", "ShardEntry", "SnapshotEngine",
+    "SnapshotPipeline", "StoreGCStats", "Strategy", "TensorRecord",
+    "ThreadPoolEngine", "TieredTransferEngine", "TorchSaveEngine",
+    "TransferStats", "UringEngine", "build_save_puts", "coalesce", "gc_store",
+    "make_cr_engine", "make_engine", "open_for", "partition_spans",
+    "plan_delta", "plan_layout", "probe_io_uring", "shard_state",
 ]

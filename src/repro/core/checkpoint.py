@@ -50,6 +50,7 @@ from dataclasses import dataclass, field, replace
 import jax
 import numpy as np
 
+from . import delta as delta_mod
 from .aggregation import ObjectSpec, Strategy, rank_padded_total
 from .engines import (ChecksumError, EngineConfig, ReadReq, SaveItem,
                       make_cr_engine)
@@ -161,13 +162,19 @@ def parse_dtype(name: str) -> np.dtype:
 class SaveMetrics:
     step: int
     total_bytes: int = 0
+    written_bytes: int = 0         # bytes submitted to storage (< total when
+    #                                delta saves skip clean chunks, §12)
     extract_seconds: float = 0.0   # tensor extraction + lean serialization
+    hash_seconds: float = 0.0      # delta chunk hashing + diff (worker-side)
     d2h_seconds: float = 0.0       # device→host (staging copy when streaming)
     flush_seconds: float = 0.0     # engine write + fsync
     commit_seconds: float = 0.0
     blocking_seconds: float = 0.0  # time the training loop was stalled
     end_to_end_seconds: float = 0.0
+    chunks_total: int = 0          # delta saves: chunk grid size
+    chunks_dirty: int = 0          # delta saves: chunks actually written
     mode: str = "blocking"         # blocking | pipelined | legacy[-async]
+    #                                (delta saves get a "delta-" prefix)
 
     @property
     def flush_gbps(self) -> float:
@@ -213,13 +220,19 @@ class CheckpointManager:
 
     def __init__(self, directory: str, engine: str = "aggregated",
                  config: EngineConfig | None = None, *,
-                 async_save: bool = False, keep: int = 3,
+                 async_save: bool = False, keep: int | None = 3,
                  verify_crc: bool = True,
                  quantize_prefixes: tuple[str, ...] = (),
                  quantize_min_bytes: int = 1 << 16,
                  streaming: bool = True,
-                 eager_snapshot: bool = False):
-        """``quantize_prefixes``: tensor keys starting with any of these are
+                 eager_snapshot: bool = False,
+                 delta: bool = False,
+                 delta_chunk_bytes: int = delta_mod.DEFAULT_CHUNK_BYTES):
+        """``keep``: retain the newest N committed steps (N >= 1); ``None``
+        retains every step. ``keep=0`` is rejected — it used to silently
+        mean "keep everything", which is what ``None`` now says out loud.
+
+        ``quantize_prefixes``: tensor keys starting with any of these are
         int8-packed on save (e.g. ("opt/mu", "opt/nu") halves AdamW-moment
         flush volume ~4x — see core.quant_codec).
 
@@ -232,6 +245,17 @@ class CheckpointManager:
         blocking path (for callers that donate device buffers before the
         pipeline drains); by default only in-place-mutable numpy sources are
         copied — JAX arrays are immutable, holding a reference is a snapshot.
+
+        ``delta``: content-addressed delta checkpointing (DESIGN.md §12) —
+        each tensor shard is chunked into ``delta_chunk_bytes`` extents and
+        hashed on the pipeline worker; only chunks that changed since the
+        previous step are written (into the shared ``chunkstore/``), clean
+        chunks become manifest references. Requires ``streaming=True``.
+        Caveat: the hash/diff pass holds host views of every tensor with a
+        dirty chunk until its chunks are staged, so delta-save host
+        residency tracks the dirty payload volume rather than the
+        ``config.inflight_bytes`` staging bound (free for host-resident
+        arrays, a real D2H copy per device array — same as a legacy save).
         """
         self.directory = os.path.abspath(directory)
         os.makedirs(self.directory, exist_ok=True)
@@ -241,10 +265,26 @@ class CheckpointManager:
         self.config = replace(config) if config is not None else EngineConfig()
         if verify_crc:
             self.config.checksum = True
+        if keep is not None and keep < 1:
+            raise ValueError(
+                f"keep={keep} would delete every checkpoint as soon as it "
+                f"commits; use keep=None to retain all steps, or keep >= 1")
+        if delta and not streaming:
+            raise ValueError("delta=True requires the streaming save path "
+                             "(streaming=True)")
+        if delta and delta_chunk_bytes < 1:
+            raise ValueError(f"delta_chunk_bytes must be >= 1, "
+                             f"got {delta_chunk_bytes}")
         self.engine = make_cr_engine(engine, self.config)
         self.async_save = async_save
         self.keep = keep
         self.verify_crc = verify_crc
+        self.delta = delta
+        self.delta_chunk_bytes = delta_chunk_bytes
+        # test hook: how long an unreferenced store file is spared by the
+        # refcount GC (a publish may not have landed its manifest yet)
+        self.delta_gc_grace_s = delta_mod.GC_GRACE_S
+        self.last_gc_stats: delta_mod.StoreGCStats | None = None
         self.quantize_prefixes = tuple(quantize_prefixes)
         self.quantize_min_bytes = quantize_min_bytes
         self.streaming = streaming
@@ -321,10 +361,27 @@ class CheckpointManager:
         return tmp
 
     def _gc_old(self) -> None:
-        steps = self.all_steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.directory, step_dir_name(s)),
-                          ignore_errors=True)
+        """Retention GC: drop steps beyond ``keep`` (None = retain all),
+        then reap chunkstore files no kept step references (refcount-aware,
+        DESIGN.md §12 — runs whenever a store exists, so a non-delta manager
+        sharing the directory still converges it).
+
+        The store pass walks every pack and re-parses every kept manifest,
+        so it only runs when it can have new work: a step was dropped just
+        now, or this manager's first pass (converging orphans a crashed
+        publish left behind) — not on every commit of a ``keep=None`` run.
+        """
+        dropped = 0
+        if self.keep is not None:
+            for s in self.all_steps()[:-self.keep]:
+                shutil.rmtree(os.path.join(self.directory, step_dir_name(s)),
+                              ignore_errors=True)
+                dropped += 1
+        if (dropped or self.last_gc_stats is None) and (
+                self.delta or os.path.isdir(
+                    os.path.join(self.directory, delta_mod.CHUNKSTORE_DIR))):
+            self.last_gc_stats = delta_mod.gc_store(
+                self.directory, grace_s=self.delta_gc_grace_s)
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, state, *, rank: int | None = None,
@@ -340,6 +397,8 @@ class CheckpointManager:
         num_ranks = jax.process_count() if num_ranks is None else num_ranks
         if self.streaming:
             mode = "pipelined" if self.async_save else "blocking"
+            if self.delta:
+                mode = f"delta-{mode}"
         else:
             mode = "legacy-async" if self.async_save else "legacy"
         metrics = SaveMetrics(step=step, mode=mode)
@@ -377,13 +436,13 @@ class CheckpointManager:
 
         # Cross-rank prefix sum for the single-file layout (paper §3.6) —
         # spec sizes are exact (packed sizes are deterministic), so the
-        # exchange happens before any payload is materialized.
+        # exchange happens before any payload is materialized. Delta saves
+        # only know their dirty set after the worker-side hash pass, so the
+        # exchange moves into the worker (every rank reaches it from its own
+        # save thread, DESIGN.md §12).
         rank_totals = None
-        if Strategy.parse(self.config.strategy) is Strategy.SINGLE_FILE:
-            local_total = rank_padded_total(
-                [ObjectSpec(p.spec.key, p.spec.nbytes) for p in puts],
-                self.config.align)
-            rank_totals = self._allgather_totals(local_total, rank, num_ranks)
+        if not self.delta:
+            rank_totals = self._single_file_totals(puts, rank, num_ranks)
 
         tmp = self._make_tmp(step)
         pipeline = SnapshotPipeline(self.engine)
@@ -392,14 +451,34 @@ class CheckpointManager:
 
         def run():
             try:
+                run_puts, plan = puts, None
+                totals = rank_totals
+                if self.delta:
+                    # chunk + hash + diff on the worker: zero blocking cost
+                    t1 = time.perf_counter()
+                    plan = delta_mod.plan_delta(
+                        puts, self._load_delta_index(),
+                        chunk_bytes=self.delta_chunk_bytes,
+                        checksum=self.config.checksum)
+                    metrics.hash_seconds = time.perf_counter() - t1
+                    metrics.chunks_total = plan.chunks_total
+                    metrics.chunks_dirty = plan.chunks_dirty
+                    run_puts = plan.puts
+                    totals = self._single_file_totals(run_puts, rank,
+                                                      num_ranks)
                 t1 = time.perf_counter()
-                manifest = pipeline.run(tmp, puts, step=step, rank=rank,
+                manifest = pipeline.run(tmp, run_puts, step=step, rank=rank,
                                         num_ranks=num_ranks,
-                                        rank_totals=rank_totals,
+                                        rank_totals=totals,
                                         on_staged=staged.set)
                 metrics.flush_seconds = time.perf_counter() - t1
                 st = self.engine.last_save_stats
                 metrics.d2h_seconds = st.copy_seconds + st.alloc_seconds
+                if plan is not None:
+                    manifest = delta_mod.apply_plan(manifest, plan)
+                    metrics.written_bytes = plan.written_bytes
+                else:
+                    metrics.written_bytes = metrics.total_bytes
                 self._commit(manifest, tmp, step, quantized_keys, metrics,
                              t_start, rank=rank)
             finally:
@@ -447,6 +526,7 @@ class CheckpointManager:
         items.append(SaveItem(LEAN_KEY, lean_blob, is_blob=True))
         metrics.d2h_seconds = time.perf_counter() - t0
         metrics.total_bytes = sum(it.nbytes for it in items)
+        metrics.written_bytes = metrics.total_bytes
 
         # Cross-rank prefix sum for the single-file layout (paper §3.6).
         rank_totals = None
@@ -487,6 +567,7 @@ class CheckpointManager:
         t2 = time.perf_counter()
         manifest.extra["save_metrics"] = {
             "total_bytes": metrics.total_bytes,
+            "written_bytes": metrics.written_bytes,
             "flush_seconds": metrics.flush_seconds,
         }
         if quantized_keys:
@@ -494,7 +575,16 @@ class CheckpointManager:
         if self.coordinator is not None:
             self.coordinator.commit(self, manifest, tmp, step, rank)
         else:
-            manifest.save(tmp)
+            saved = False
+            if self.delta:
+                # relocate fresh chunk/blob files into the shared store and
+                # rewrite the manifest's references BEFORE it is written —
+                # a published manifest never points into a GC-able step dir
+                saved = delta_mod.publish_packs(manifest, tmp,
+                                                self.directory,
+                                                step_dir_name(step))
+            if not saved:
+                manifest.save(tmp)
             self._publish(tmp, step)
             self._gc_old()
         metrics.commit_seconds = time.perf_counter() - t2
@@ -652,9 +742,19 @@ class CheckpointManager:
             tasks.append(RestoreTask(stub.key, rec, wanted[stub.key],
                                      quantized=stub.key in qset))
         if self.verify_crc:
-            crcs = {f"{t.key}@{sh.path}@{sh.offset}": sh.crc32
-                    for t in tasks for sh in t.record.shards
-                    if sh.crc32 is not None}
+            # chunked shards (delta, §12) verify per chunk in-stream, plus a
+            # whole-payload CRC under the entry's synthetic key (checked by
+            # the pipeline after reassembly)
+            crcs = {}
+            for t in tasks:
+                for sh in t.record.shards:
+                    refs = (sh.chunks or ()) if delta_mod.is_chunked(sh) \
+                        else (sh,)
+                    for r in refs:
+                        if r.crc32 is not None:
+                            crcs[f"{t.key}@{r.path}@{r.offset}"] = r.crc32
+                    if delta_mod.is_chunked(sh) and sh.crc32 is not None:
+                        crcs[f"{t.key}@{sh.path}@{sh.offset}"] = sh.crc32
         on_reqs = None
         if prefetch is not None:   # pull exactly the planned extents
             def on_reqs(reqs):
@@ -682,11 +782,23 @@ class CheckpointManager:
         ``streaming=False`` for A/B benchmarking."""
         t0 = time.perf_counter()
         extent_reqs: dict[tuple[str, str, int], ReadReq] = {}
+        chunked: dict[tuple[str, str, int], object] = {}  # delta entries
         for key, windows in wanted.items():
             rec = _deduped(manifest.tensors[key])
             for window, _dev in windows:
                 for piece in plan_window(rec, window):
                     sh = piece.shard
+                    if delta_mod.is_chunked(sh):
+                        # chunk-reference shard (§12): read the real chunk
+                        # extents; the payload is reassembled below under
+                        # the entry's synthetic (path, offset) identity
+                        chunked.setdefault((key, sh.path, sh.offset), sh)
+                        for r in sh.chunks or ():
+                            extent_reqs.setdefault(
+                                (key, r.path, r.offset),
+                                ReadReq(f"{key}@{r.path}@{r.offset}", r.path,
+                                        r.offset, r.nbytes, obj=key))
+                        continue
                     extent_reqs.setdefault(
                         (key, sh.path, sh.offset),
                         ReadReq(f"{key}@{sh.path}@{sh.offset}", sh.path,
@@ -702,6 +814,12 @@ class CheckpointManager:
         metrics.peak_staged_bytes = sum(
             req.nbytes for req in extent_reqs.values())
         extent_bytes = {eo: raw[req.key] for eo, req in extent_reqs.items()}
+        for (key, spath, soff), sh in chunked.items():
+            extent_bytes[(key, spath, soff)] = delta_mod.reassemble_payload(
+                sh,
+                lambda r, k=key: extent_bytes[(k, r.path, r.offset)],
+                lambda r, b, k=key: self._check_crc(r.crc32, b, k, r.path,
+                                                    r.offset))
         if self.verify_crc:
             self._verify_extents(manifest, extent_bytes)
 
@@ -726,6 +844,34 @@ class CheckpointManager:
         shard-ownership rule lives in exactly one place."""
         for arr, idx in iter_host_shards(t):
             yield to_numpy_view(arr), idx
+
+    def _single_file_totals(self, puts, rank: int,
+                            num_ranks: int) -> list[int] | None:
+        """SINGLE_FILE prefix-sum exchange over the declared put sizes
+        (paper §3.6); None for the other layouts."""
+        if Strategy.parse(self.config.strategy) is not Strategy.SINGLE_FILE:
+            return None
+        local_total = rank_padded_total(
+            [ObjectSpec(p.spec.key, p.spec.nbytes) for p in puts],
+            self.config.align)
+        return self._allgather_totals(local_total, rank, num_ranks)
+
+    def _load_delta_index(self) -> "delta_mod.DeltaIndex":
+        """Chunk index of the newest committed step (empty when there is
+        none, its manifest is unreadable, or it predates delta — every
+        chunk then hashes dirty, i.e. the save degrades to a full write).
+        Reloaded per save rather than cached: under the multi-writer
+        coordinator the authoritative chunkstore paths only exist in the
+        merged manifest rank 0 published."""
+        step = self.latest_step()
+        if step is None:
+            return delta_mod.DeltaIndex()
+        try:
+            m = Manifest.load(os.path.join(self.directory,
+                                           step_dir_name(step)))
+        except ManifestError:
+            return delta_mod.DeltaIndex()
+        return delta_mod.DeltaIndex.from_manifest(m)
 
     def _allgather_totals(self, local_total: int, rank: int,
                           num_ranks: int) -> list[int]:
@@ -809,14 +955,6 @@ class CheckpointManager:
         for eo, raw in extent_bytes.items():
             expect, key = by_extent.get(eo, (None, None))
             self._check_crc(expect, raw, key, eo[1], eo[2])
-
-    @staticmethod
-    def _fsync_dir(path: str) -> None:
-        fd = os.open(path, os.O_RDONLY)
-        try:
-            os.fsync(fd)
-        finally:
-            os.close(fd)
 
     def close(self) -> None:
         self.wait()

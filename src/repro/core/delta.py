@@ -1,0 +1,508 @@
+"""Content-addressed delta checkpointing (DESIGN.md §12).
+
+Every save in this repo used to persist the full byte image of every tensor
+at every step. When optimizer slots, frozen layers, embeddings, or quantized
+weights change sparsely between steps, most of those bytes are identical to
+the previous step — the paper's *volume* axis multiplied by training length
+for no information gain. This module decouples *what state is* from *which
+bytes must move* (ByteCheckpoint's decomposition, DataStates-LLM's
+composable state providers):
+
+  chunking        every tensor shard's snapshot payload is split into fixed,
+                  alignment-friendly extents and hashed (blake2b-128) on the
+                  pipeline worker — never on the training loop's blocking
+                  path,
+  dirty detection the hashes are diffed against the previous step's chunk
+                  index (recovered from the prior manifest's chunk entries);
+                  only dirty chunks are declared and submitted through the
+                  existing streaming save path (``CREngine.begin_save/put``),
+                  so they ride the same coalescing/backpressure machinery as
+                  a full save,
+  chunk store     at publish, the step's freshly written data files are
+                  renamed into ``<root>/chunkstore/packs/<step>-<uuid>/`` and
+                  the manifest's chunk references rewritten to
+                  ``../chunkstore/...`` paths — resolvable from ANY step
+                  directory by the unchanged engine path join. Clean chunks
+                  are recorded as references into packs written by earlier
+                  steps,
+  retention GC    ``CheckpointManager._gc_old`` becomes refcount-aware: a
+                  store file is deleted only when no kept step (and no live
+                  in-flight save's staged manifest) references it. Refcounts
+                  are recomputed from manifests on every pass — no mutable
+                  counter files to corrupt, so the GC is crash-safe and
+                  self-healing; packs younger than a grace period are never
+                  reaped (they may belong to a publish in flight).
+
+Restore resolves chunk references back through the streaming read path
+(``begin_restore/get``) with per-chunk CRCs verified in-stream, reassembles
+each shard payload in order, and verifies the whole-payload CRC —
+bit-exactly equal to a full-save restore.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import posixpath
+import time
+import uuid
+import zlib
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from .engines import SaveSpec
+from .engines.base import as_u8
+from .manifest import (CHUNK_KIND, ChunkRef, Manifest, ManifestError,
+                       MANIFEST_NAME, ShardEntry, _RANK_MANIFEST_RE)
+from .pipeline import PendingPut
+
+CHUNKSTORE_DIR = "chunkstore"
+PACK_SUBDIR = "packs"
+# how store-resident refs appear relative to a step directory: one level up,
+# into the checkpoint root's store (engines join paths against the step dir)
+STORE_PREFIX = "../" + CHUNKSTORE_DIR + "/"
+DEFAULT_CHUNK_BYTES = 256 << 10
+# store files younger than this are never reaped: they may belong to a
+# publish (or a cross-tier fetch) that has not landed its manifest yet
+GC_GRACE_S = 300.0
+
+
+def chunk_hash(mv) -> str:
+    """Content address of one chunk: blake2b-128 hex digest."""
+    return hashlib.blake2b(mv, digest_size=16).hexdigest()
+
+
+def chunk_spans(nbytes: int, chunk_bytes: int):
+    """Fixed chunk grid over a payload: (pos, n) pairs, last one ragged."""
+    pos = 0
+    while pos < nbytes:
+        n = min(chunk_bytes, nbytes - pos)
+        yield pos, n
+        pos += n
+
+
+def is_chunked(sh: ShardEntry) -> bool:
+    return getattr(sh, "kind", None) == CHUNK_KIND
+
+
+def reassemble_payload(sh: ShardEntry, fetch, check_chunk=None) -> np.ndarray:
+    """Concatenate a chunk-reference shard's chunks back into its payload.
+
+    ``fetch(ref)`` returns each chunk's uint8 bytes in declaration order;
+    ``check_chunk(ref, bytes)`` optionally verifies each as it lands. Both
+    restore paths (streaming pipeline and monolithic) reassemble through
+    this one implementation so they cannot drift apart on chunk ordering
+    (test_delta_monolithic_restore_parity guards the equivalence)."""
+    payload = np.empty(sh.nbytes, np.uint8)
+    pos = 0
+    for r in sh.chunks or ():
+        b = fetch(r)
+        if check_chunk is not None:
+            check_chunk(r, b)
+        payload[pos:pos + r.nbytes] = b
+        pos += r.nbytes
+    if pos != sh.nbytes:
+        # a parseable manifest whose chunk list lost a trailing ref must
+        # fail loudly, not hand back uninitialized tail bytes (the
+        # whole-payload CRC would also catch this, but only when CRCs are on)
+        raise ManifestError(
+            f"chunk refs cover {pos} of {sh.nbytes} payload bytes "
+            f"({sh.path!r})")
+    return payload
+
+
+def store_rel(path: str) -> str:
+    """Normalize a step-relative store ref to a store-relative path."""
+    return posixpath.normpath(path[len(STORE_PREFIX):])
+
+
+class DeltaIndex:
+    """Chunk index of the previous step, recovered from its manifest.
+
+    Keyed by (record_key, shard index window, payload nbytes): a shard whose
+    tensor, window, or size changed gets no match and is fully dirty —
+    which also makes resharding, chunk-size changes, and delta-over-non-delta
+    transitions trivially correct (everything rewrites once).
+    Only references already resident in the chunkstore are indexed; a fresh
+    save must never point at bytes inside a GC-able step directory.
+    """
+
+    def __init__(self):
+        self._by_shard: dict[tuple, tuple[ChunkRef, ...]] = {}
+
+    @staticmethod
+    def from_manifest(manifest: Manifest | None) -> "DeltaIndex":
+        idx = DeltaIndex()
+        if manifest is None:
+            return idx
+        for rec in manifest.tensors.values():
+            for sh in rec.shards:
+                if not is_chunked(sh) or sh.chunks is None:
+                    continue
+                if not all(r.path.startswith(STORE_PREFIX)
+                           for r in sh.chunks):
+                    continue
+                idx._by_shard.setdefault(
+                    (rec.key, tuple(sh.index), sh.nbytes), sh.chunks)
+        return idx
+
+    def lookup(self, record_key: str, index, nbytes: int
+               ) -> tuple[ChunkRef, ...] | None:
+        return self._by_shard.get((record_key, tuple(index or ()), nbytes))
+
+    def __len__(self) -> int:
+        return len(self._by_shard)
+
+
+@dataclass
+class _ShardChunks:
+    """One original tensor-shard put, decomposed into chunk references.
+
+    ``refs`` holds, per chunk in payload order, either a ``ChunkRef`` (clean
+    — points into the store) or a ``(put_key, hash)`` pair (dirty — resolved
+    against the stream manifest after the flush lands)."""
+    spec: SaveSpec
+    refs: list
+    payload_crc: int | None
+
+
+@dataclass
+class DeltaPlan:
+    """Output of the hash/diff pass: what to write, and how to describe it."""
+    puts: list[PendingPut] = field(default_factory=list)
+    shards: list[_ShardChunks] = field(default_factory=list)
+    total_bytes: int = 0       # logical tensor + blob bytes of the state
+    dirty_bytes: int = 0       # chunk bytes actually submitted
+    blob_bytes: int = 0        # lean-object bytes (always written)
+    chunks_total: int = 0
+    chunks_dirty: int = 0
+
+    @property
+    def written_bytes(self) -> int:
+        return self.dirty_bytes + self.blob_bytes
+
+
+def plan_delta(puts: list[PendingPut], index: DeltaIndex, *,
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+               checksum: bool = True) -> DeltaPlan:
+    """Resolve, chunk, hash, and diff every declared put.
+
+    Runs on the pipeline worker (async saves pay zero blocking time for the
+    hash pass). Blob puts (the lean object) pass through unchanged; tensor
+    puts are replaced by one put per DIRTY chunk — a clean chunk becomes a
+    reference to the previous step's store extent. Chunk hashing touches
+    every payload byte, which is exactly the D2H snapshot the full save
+    would have done anyway; what it buys is not writing the clean ones.
+
+    Memory: dirty-chunk puts hold VIEWS of the resolved payload, so host
+    residency during the flush is the payloads of tensors with >= 1 dirty
+    chunk (clean-only tensors are dropped as the loop advances). For host
+    arrays those views are free (they alias the caller's state); only
+    device-array D2H copies and quant-packed buffers are real allocations
+    — copying dirty chunks instead would shrink the sparse case but add a
+    full extra copy at high dirty fractions, so views win on balance.
+    """
+    plan = DeltaPlan()
+    for p in puts:
+        if p.spec.is_blob:
+            plan.puts.append(p)
+            plan.blob_bytes += p.spec.nbytes
+            plan.total_bytes += p.spec.nbytes
+            continue
+        payload = np.frombuffer(as_u8(p.resolve()), np.uint8)
+        if payload.nbytes != p.spec.nbytes:
+            raise ValueError(
+                f"declared {p.spec.nbytes} bytes for {p.spec.key!r}, "
+                f"resolved {payload.nbytes}")
+        plan.total_bytes += payload.nbytes
+        rkey = p.spec.record_key or p.spec.key
+        prior = index.lookup(rkey, p.spec.index, p.spec.nbytes)
+        crc = 0 if checksum else None
+        refs: list = []
+        for j, (pos, n) in enumerate(chunk_spans(p.spec.nbytes, chunk_bytes)):
+            chunk = payload[pos:pos + n]
+            h = chunk_hash(chunk)
+            if checksum:
+                crc = zlib.crc32(chunk, crc) & 0xFFFFFFFF
+            plan.chunks_total += 1
+            pr = prior[j] if prior is not None and j < len(prior) else None
+            if pr is not None and pr.hash == h and pr.nbytes == n:
+                refs.append(pr)                       # clean: reference
+                continue
+            ck = f"{p.spec.key}.c{j:05d}"
+            plan.puts.append(PendingPut(
+                SaveSpec(ck, n, "uint8", (n,), ((0, n),), record_key=ck),
+                (lambda c=chunk: c)))
+            refs.append((ck, h))                      # dirty: write
+            plan.chunks_dirty += 1
+            plan.dirty_bytes += n
+        plan.shards.append(_ShardChunks(p.spec, refs, crc))
+    return plan
+
+
+def apply_plan(stream_manifest: Manifest, plan: DeltaPlan) -> Manifest:
+    """Fold the flushed stream manifest back into chunked shard entries.
+
+    The stream manifest maps each dirty-chunk put to its file extent; the
+    returned manifest replaces those per-chunk records with one
+    ``kind="chunks"`` entry per original tensor shard, mixing fresh extents
+    (still step-dir-relative — relocated by ``publish_packs``) with the
+    plan's clean store references. Blobs and extra metadata ride through.
+    """
+    out = Manifest(stream_manifest.step, stream_manifest.num_ranks,
+                   stream_manifest.strategy)
+    out.blobs = stream_manifest.blobs
+    out.extra = stream_manifest.extra
+    for sc in plan.shards:
+        spec = sc.spec
+        chunks: list[ChunkRef] = []
+        for r in sc.refs:
+            if isinstance(r, ChunkRef):
+                chunks.append(r)
+                continue
+            ck, h = r
+            ext = stream_manifest.tensors[ck].shards[0]
+            chunks.append(ChunkRef(h, ext.path, ext.offset, ext.nbytes,
+                                   ext.crc32))
+        index = spec.index
+        if index is None:
+            index = tuple((0, s) for s in (spec.global_shape or ()))
+        gshape = (spec.global_shape if spec.global_shape is not None
+                  else (spec.nbytes,))
+        out.add_shard(
+            spec.record_key or spec.key, spec.dtype or "uint8", gshape,
+            ShardEntry(tuple(index), f"<chunks:{uuid.uuid4().hex[:12]}>", 0,
+                       spec.nbytes, sc.payload_crc, CHUNK_KIND,
+                       tuple(chunks)))
+    return out
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def publish_packs(manifest: Manifest, tmp: str, root: str, tag: str) -> bool:
+    """Relocate the step's freshly written data files into the chunkstore.
+    Returns True when the rewritten manifest was already written into
+    ``tmp`` (callers must not redundantly re-serialize it).
+
+    Every file referenced by a step-dir-relative path (fresh dirty chunks
+    AND the lean blob — under single-file layouts they share one file) is
+    renamed from ``tmp`` into ``<root>/chunkstore/packs/<tag>-<uuid>/`` and
+    the manifest rewritten to ``../chunkstore/...`` references, so the bytes
+    survive the step directory's eventual ``rmtree``.
+
+    Ordering closes the GC race: the REWRITTEN manifest is written into the
+    (pidfile-owned, GC-pinning) staging dir BEFORE any file is renamed into
+    the store, so the moment a pack file becomes visible there, a live
+    manifest referencing it already exists — a concurrent refcount GC
+    (which snapshots its candidate list before computing refs) can never
+    see it as an orphan. A crash mid-sequence leaves either a doomed tmp
+    dir (reaped by ``_gc_tmp``) or unreferenced store files (reaped after
+    the grace period) — never a committed manifest pointing at missing
+    bytes, because the commit rename happens strictly after the moves.
+    """
+    fresh: set[str] = set()
+    for rec in manifest.tensors.values():
+        for sh in rec.shards:
+            if is_chunked(sh) and sh.chunks:
+                fresh.update(r.path for r in sh.chunks
+                             if not r.path.startswith(STORE_PREFIX))
+            elif not is_chunked(sh) and not sh.path.startswith(STORE_PREFIX):
+                fresh.add(sh.path)
+    fresh.update(b.path for b in manifest.blobs.values()
+                 if not b.path.startswith(STORE_PREFIX))
+    fresh = {p for p in fresh if os.path.exists(os.path.join(tmp, p))}
+    if not fresh:
+        return False
+    pack = f"{tag}-{uuid.uuid4().hex[:8]}"
+    pack_dir = os.path.join(root, CHUNKSTORE_DIR, PACK_SUBDIR, pack)
+    moved = {rel: posixpath.join(STORE_PREFIX.rstrip("/"), PACK_SUBDIR,
+                                 pack, rel)
+             for rel in sorted(fresh)}
+    # 1. rewrite references (ShardEntry/ChunkRef are frozen: rebuild)
+    for rec in manifest.tensors.values():
+        new_shards = []
+        for sh in rec.shards:
+            if is_chunked(sh) and sh.chunks:
+                refs = tuple(
+                    replace(r, path=moved[r.path]) if r.path in moved else r
+                    for r in sh.chunks)
+                sh = replace(sh, chunks=refs)
+            elif sh.path in moved:
+                sh = replace(sh, path=moved[sh.path])
+            new_shards.append(sh)
+        rec.shards = new_shards
+    for key, b in list(manifest.blobs.items()):
+        if b.path in moved:
+            manifest.blobs[key] = replace(b, path=moved[b.path])
+    # 2. land the rewritten manifest in the pinning tmp dir FIRST: the refs
+    # exist on disk before any file they name becomes reapable
+    manifest.save(tmp)
+    # 3. now move the payload files into the store
+    dirs_to_sync = set()
+    for rel in sorted(fresh):
+        src = os.path.join(tmp, rel)
+        dst = os.path.join(pack_dir, rel)
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        os.replace(src, dst)
+        dirs_to_sync.add(os.path.dirname(dst))
+    for d in sorted(dirs_to_sync, reverse=True):
+        _fsync_dir(d)
+    _fsync_dir(os.path.join(root, CHUNKSTORE_DIR, PACK_SUBDIR))
+    # drop now-empty data dirs so the published step holds only metadata
+    for rel in sorted(fresh, reverse=True):
+        d = os.path.dirname(os.path.join(tmp, rel))
+        while len(d) > len(tmp):
+            try:
+                os.rmdir(d)
+            except OSError:
+                break
+            d = os.path.dirname(d)
+    return True
+
+
+# ------------------------------------------------------------ retention GC
+@dataclass
+class StoreGCStats:
+    scanned: int = 0
+    kept: int = 0
+    deleted: int = 0
+    bytes_freed: int = 0
+    refcounts: dict = field(default_factory=dict)  # store-rel path -> refs
+
+
+def manifest_store_paths(m: Manifest):
+    """Store-relative paths this manifest references."""
+    for rec in m.tensors.values():
+        for sh in rec.shards:
+            if is_chunked(sh) and sh.chunks:
+                for r in sh.chunks:
+                    if r.path.startswith(STORE_PREFIX):
+                        yield store_rel(r.path)
+            elif sh.path.startswith(STORE_PREFIX):
+                yield store_rel(sh.path)
+    for b in m.blobs.values():
+        if b.path.startswith(STORE_PREFIX):
+            yield store_rel(b.path)
+
+
+def _scan_store_refs(root: str) -> tuple[dict[str, int], bool]:
+    """One refcount pass; also reports whether a listed manifest vanished
+    mid-scan (a concurrent publish renaming ``tmp`` → step dir between our
+    ``listdir`` and the read — the refs exist but under a name this pass
+    never visited, so the caller must rescan)."""
+    from .checkpoint import _STEP_RE, tmp_in_flight  # runtime: avoid cycle
+    counts: dict[str, int] = {}
+    vanished = False
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return counts, False
+    for name in names:
+        full = os.path.join(root, name)
+        if not os.path.isdir(full):
+            continue
+        mpaths = []
+        if _STEP_RE.match(name):
+            mpaths = [os.path.join(full, MANIFEST_NAME)]
+        elif ".tmp-" in name and tmp_in_flight(full):
+            try:
+                inner = os.listdir(full)
+            except OSError:
+                vanished = True
+                continue
+            mpaths = [os.path.join(full, n) for n in inner
+                      if n == MANIFEST_NAME or _RANK_MANIFEST_RE.match(n)]
+        for mp in mpaths:
+            try:
+                m = Manifest._read(mp)
+            except ManifestError:
+                if not os.path.exists(mp):
+                    vanished = True   # dir renamed away under us
+                continue   # truly corrupt/foreign manifest pins nothing
+            for rel in manifest_store_paths(m):
+                counts[rel] = counts.get(rel, 0) + 1
+    return counts, vanished
+
+
+def referenced_store_paths(root: str) -> dict[str, int]:
+    """Refcount every store file referenced by manifests under ``root``.
+
+    Committed step dirs count via their ``manifest.json``; ``.tmp-*`` dirs
+    belonging to a LIVE save (ownership pidfile / young-dir age — the same
+    machinery that protects in-flight saves from ``_gc_tmp``) pin whatever
+    their staged ``manifest.json`` / ``MANIFEST.rank-*`` files reference, so
+    a concurrent manager's GC cannot reap chunks a peer's in-flight save
+    has already committed to referencing. Rescans when a publish renames a
+    manifest out from under the pass; raises ``InterruptedError`` if it
+    never stabilizes (callers skip deletions and converge next pass).
+    """
+    for _ in range(5):
+        counts, vanished = _scan_store_refs(root)
+        if not vanished:
+            return counts
+    raise InterruptedError(
+        "store refcount scan kept racing concurrent publishes")
+
+
+def gc_store(root: str, *, grace_s: float = GC_GRACE_S) -> StoreGCStats:
+    """Reap store files unreferenced by any kept step (refcounted GC).
+
+    Crash-safe by construction: refcounts are recomputed from the manifests
+    actually on disk, so an interrupted GC (or publish) converges on the
+    next pass; files younger than ``grace_s`` are spared because their
+    referencing manifest may not have landed yet. The candidate file list
+    is snapshotted BEFORE refs are computed — a pack that appears mid-pass
+    is not a candidate, and ``publish_packs`` writes its referencing
+    manifest before moving any file, so the two passes can interleave
+    freely without reaping a just-published chunk.
+    """
+    stats = StoreGCStats()
+    store = os.path.join(root, CHUNKSTORE_DIR)
+    if not os.path.isdir(store):
+        return stats
+    candidates: list[str] = []
+    dirs: list[str] = []
+    for dirpath, _dirnames, filenames in os.walk(store, topdown=False):
+        candidates += [os.path.join(dirpath, fn) for fn in filenames]
+        if dirpath != store:
+            dirs.append(dirpath)
+    try:
+        stats.refcounts = referenced_store_paths(root)
+    except InterruptedError:
+        # publishes kept racing the ref scan: skip deletions this pass (the
+        # next GC converges) rather than risk reaping a live chunk
+        stats.scanned = stats.kept = len(candidates)
+        return stats
+    now = time.time()
+    for fp in candidates:
+        rel = posixpath.normpath(os.path.relpath(fp, store))
+        stats.scanned += 1
+        if stats.refcounts.get(rel):
+            stats.kept += 1
+            continue
+        try:
+            st = os.stat(fp)
+        except OSError:
+            continue   # vanished concurrently
+        if now - st.st_mtime < grace_s:
+            stats.kept += 1
+            continue
+        try:
+            os.remove(fp)
+        except OSError:
+            continue
+        stats.deleted += 1
+        stats.bytes_freed += st.st_size
+    for d in dirs:
+        try:
+            os.rmdir(d)   # prune empty pack dirs
+        except OSError:
+            pass
+    return stats

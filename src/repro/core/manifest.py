@@ -20,7 +20,20 @@ import zlib
 from dataclasses import dataclass, field, asdict
 
 MANIFEST_NAME = "manifest.json"
-FORMAT_VERSION = 2
+# Ceiling this reader accepts / writes. Version 3 adds the chunk-reference
+# shard entry kind (content-addressed delta checkpoints, DESIGN.md §12); a
+# manifest without chunk entries is still written at BASE_FORMAT_VERSION so
+# pre-delta readers keep loading non-delta checkpoints.
+FORMAT_VERSION = 3
+BASE_FORMAT_VERSION = 2
+
+# shard entry kinds: "extent" = bytes at (path, offset); "chunks" = the
+# payload is the concatenation of content-addressed ChunkRefs into the
+# chunkstore. An unknown kind raises typed ManifestError (old readers must
+# not misread a chunk entry as a raw extent).
+EXTENT_KIND = "extent"
+CHUNK_KIND = "chunks"
+_SHARD_KINDS = (EXTENT_KIND, CHUNK_KIND)
 
 _RANK_MANIFEST_RE = re.compile(r"^MANIFEST\.rank-(\d+)$")
 
@@ -41,22 +54,69 @@ class ManifestMergeError(ManifestError):
 
 
 @dataclass(frozen=True)
+class ChunkRef:
+    """One content-addressed chunk of a shard's payload bytes.
+
+    ``hash`` is the blake2b-128 hex digest of the chunk bytes (the content
+    address); ``path`` is step-dir-relative like every other manifest path —
+    chunks resident in the store use ``../chunkstore/packs/...`` so the same
+    engine path-join resolves them from any step directory.
+    """
+    hash: str
+    path: str
+    offset: int
+    nbytes: int
+    crc32: int | None = None
+
+    def to_json(self):
+        return {"hash": self.hash, "path": self.path, "offset": self.offset,
+                "nbytes": self.nbytes, "crc32": self.crc32}
+
+    @staticmethod
+    def from_json(d) -> "ChunkRef":
+        return ChunkRef(d["hash"], d["path"], d["offset"], d["nbytes"],
+                        d.get("crc32"))
+
+
+@dataclass(frozen=True)
 class ShardEntry:
-    """One saved shard of one global tensor."""
+    """One saved shard of one global tensor.
+
+    ``kind == EXTENT_KIND``: the payload is the bytes at (path, offset).
+    ``kind == CHUNK_KIND``: the payload is the in-order concatenation of
+    ``chunks`` (content-addressed delta entries, DESIGN.md §12); ``path`` is
+    then a synthetic unique identifier (never opened), ``offset`` is 0, and
+    ``crc32`` covers the whole reassembled payload.
+    """
     index: tuple[tuple[int, int], ...]  # (start, stop) per dim, global coords
     path: str                           # file path relative to ckpt dir
     offset: int                         # byte offset in file
     nbytes: int                         # logical bytes
     crc32: int | None = None
+    kind: str = EXTENT_KIND
+    chunks: tuple[ChunkRef, ...] | None = None
 
     def to_json(self):
-        return {"index": [list(p) for p in self.index], "path": self.path,
-                "offset": self.offset, "nbytes": self.nbytes, "crc32": self.crc32}
+        d = {"index": [list(p) for p in self.index], "path": self.path,
+             "offset": self.offset, "nbytes": self.nbytes, "crc32": self.crc32}
+        if self.kind != EXTENT_KIND:
+            d["kind"] = self.kind
+            d["chunks"] = [c.to_json() for c in (self.chunks or ())]
+        return d
 
     @staticmethod
     def from_json(d) -> "ShardEntry":
+        kind = d.get("kind", EXTENT_KIND)
+        if kind not in _SHARD_KINDS:
+            raise ManifestError(
+                f"unknown shard entry kind {kind!r} (this reader understands "
+                f"{_SHARD_KINDS}); refusing to misread the entry")
+        chunks = None
+        if kind == CHUNK_KIND:
+            chunks = tuple(ChunkRef.from_json(c) for c in d.get("chunks", ()))
         return ShardEntry(tuple(tuple(p) for p in d["index"]), d["path"],
-                          d["offset"], d["nbytes"], d.get("crc32"))
+                          d["offset"], d["nbytes"], d.get("crc32"),
+                          kind, chunks)
 
 
 @dataclass
@@ -100,7 +160,7 @@ class Manifest:
     step: int
     num_ranks: int
     strategy: str
-    format_version: int = FORMAT_VERSION
+    format_version: int = BASE_FORMAT_VERSION
     tensors: dict[str, TensorRecord] = field(default_factory=dict)
     blobs: dict[str, BlobRecord] = field(default_factory=dict)
     extra: dict = field(default_factory=dict)  # engine config, mesh, timings
@@ -177,7 +237,13 @@ class Manifest:
 
     # ---- (de)serialization ------------------------------------------------
     def to_json(self) -> dict:
-        return {"format_version": self.format_version, "step": self.step,
+        # version floats with content: chunk-reference entries need the v3
+        # reader, everything else stays loadable by pre-delta readers
+        fv = self.format_version
+        if any(sh.kind != EXTENT_KIND
+               for rec in self.tensors.values() for sh in rec.shards):
+            fv = max(fv, FORMAT_VERSION)
+        return {"format_version": fv, "step": self.step,
                 "num_ranks": self.num_ranks, "strategy": self.strategy,
                 "tensors": {k: v.to_json() for k, v in self.tensors.items()},
                 "blobs": {k: v.to_json() for k, v in self.blobs.items()},

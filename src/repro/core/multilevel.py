@@ -22,6 +22,7 @@ tensor materialization and commits the step locally when fully covered.
 
 from __future__ import annotations
 
+import glob
 import os
 import shutil
 import threading
@@ -29,8 +30,9 @@ import time
 from concurrent.futures import ThreadPoolExecutor, wait, FIRST_COMPLETED
 from dataclasses import dataclass, field
 
+from . import delta as delta_mod
 from .checkpoint import CheckpointManager, replace_dir, step_dir_name
-from .manifest import Manifest
+from .manifest import Manifest, ManifestError
 from .tiered import RestorePrefetcher, TieredTransferEngine
 
 
@@ -42,6 +44,8 @@ class FlushStats:
     hedged: int = 0          # duplicate transfers issued
     hedge_wins: int = 0      # duplicates that beat the original
     extents: int = 0         # extent-granular segments (tiered path)
+    chunks_flushed: int = 0  # delta store files copied to level 1 (§12)
+    chunks_skipped: int = 0  # delta store files already resident at level 1
     backend: str = ""        # io_engine backend the flush executed on
     read_gbps: float = 0.0   # source tier (level 0) bandwidth
     write_gbps: float = 0.0  # destination tier (level 1) bandwidth
@@ -136,8 +140,45 @@ class MultiLevelCheckpointer:
         # manifest last: its presence defines validity at level 1 too
         files.sort(key=lambda f: (f[1] == "manifest.json", f[1]))
 
+        # delta composition (§12): chunkstore files the step references must
+        # be resident at level 1 BEFORE the step publishes there — but a
+        # chunk already flushed by an earlier step is never moved again
+        # (that is most of the point of delta: clean bytes cross no tier).
+        # Copies land under unique .tmp names and are renamed in, so a
+        # crashed flush can never leave a full-sized-but-partial chunk file
+        # that a later flush would wrongly skip.
+        store_pairs: list[tuple[str, str, str]] = []   # (src, tmp, final)
+        store_rels = self._store_files(src_dir)
+        for rel in store_rels:
+            local = os.path.join(self.local.directory,
+                                 delta_mod.CHUNKSTORE_DIR, rel)
+            remote = os.path.join(self.remote_dir,
+                                  delta_mod.CHUNKSTORE_DIR, rel)
+            if (os.path.exists(remote)
+                    and os.path.getsize(remote) == os.path.getsize(local)):
+                stats.chunks_skipped += 1
+                continue
+            # reap tmp copies a crashed earlier flush stranded (no manager
+            # ever GCs the remote tier); age-guarded so a concurrent
+            # flusher's live tmp is left alone
+            for stale in glob.glob(f"{remote}.tmp-flush-*"):
+                try:
+                    if time.time() - os.path.getmtime(stale) > 300.0:
+                        os.remove(stale)
+                except OSError:
+                    pass
+            store_pairs.append(
+                (local, f"{remote}.tmp-flush-{os.getpid()}", remote))
+            stats.chunks_flushed += 1
+
         if self.copy_fn is not None:
             # legacy path: one copy_fn call per file, whole-file hedging
+            for src, tmp, _fin in store_pairs:
+                os.makedirs(os.path.dirname(tmp), exist_ok=True)
+                size = os.path.getsize(src)
+                self._copy_hedged(src, tmp, size, stats)
+                stats.files += 1
+                stats.bytes += size
             for src, rel, size in files:
                 dst = os.path.join(dst_tmp, rel)
                 os.makedirs(os.path.dirname(dst), exist_ok=True)
@@ -146,8 +187,9 @@ class MultiLevelCheckpointer:
                 stats.bytes += size
         else:
             # tiered path: extent streams through an io_engine backend
-            pairs = [(src, os.path.join(dst_tmp, rel))
-                     for src, rel, _size in files]
+            pairs = [(src, tmp) for src, tmp, _fin in store_pairs]
+            pairs += [(src, os.path.join(dst_tmp, rel))
+                      for src, rel, _size in files]
             ts = self.transfer.transfer(pairs)
             stats.files = ts.files
             stats.bytes = ts.bytes
@@ -156,6 +198,8 @@ class MultiLevelCheckpointer:
             stats.hedge_wins = ts.hedge_wins
             stats.backend = ts.backend
             stats.per_tier = ts.per_tier()
+        for _src, tmp, fin in store_pairs:
+            os.replace(tmp, fin)
         # the shared displaced-aside publish: a re-flush of an existing
         # remote step never leaves a window where the previous copy is gone
         # before the new one landed
@@ -168,6 +212,15 @@ class MultiLevelCheckpointer:
                                 .get("bytes_written", 0) / stats.seconds / 1e9)
         self.last_flush_stats = stats
         return stats
+
+    @staticmethod
+    def _store_files(src_dir: str) -> list[str]:
+        """Store-relative chunkstore files the committed step references."""
+        try:
+            manifest = Manifest.load(src_dir)
+        except ManifestError:
+            return []
+        return sorted(set(delta_mod.manifest_store_paths(manifest)))
 
     def _copy_hedged(self, src: str, dst: str, size: int,
                      stats: FlushStats) -> None:

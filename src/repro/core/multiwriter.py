@@ -163,7 +163,18 @@ class CommitCoordinator:
                 for r in range(1, self.group.num_ranks):
                     merged.merge(Manifest.load_rank(tmp, r), rank=r)
                 merged.num_ranks = self.group.num_ranks
-                merged.save(tmp)
+                saved = False
+                if mgr.delta:
+                    # delta saves (§12): every rank's manifest described its
+                    # fresh chunks with step-dir-relative paths; rank 0
+                    # relocates the shared data files into the chunkstore
+                    # and rewrites the MERGED manifest exactly once, before
+                    # the only publish
+                    from .delta import publish_packs
+                    saved = publish_packs(merged, tmp, mgr.directory,
+                                          step_dir_name(step))
+                if not saved:
+                    merged.save(tmp)
                 mgr._publish(tmp, step)
                 mgr._gc_old()
                 self._err = None

@@ -48,8 +48,8 @@ from typing import Callable
 import jax
 import numpy as np
 
-from .engines import ReadReq, SaveSpec
-from .manifest import Manifest, TensorRecord
+from .engines import ChecksumError, ReadReq, SaveSpec
+from .manifest import CHUNK_KIND, Manifest, TensorRecord, crc32_of
 from .resharding import WindowAssembler, normalize_index, record_dtype
 from .serialization import (LEAN_KEY, LocalShard, as_bytes_view,
                             tensor_nbytes, to_numpy_view)
@@ -215,7 +215,16 @@ class RestorePipeline:
 
         # Plan: per task, one assembler per distinct window and the ordered
         # set of extents feeding them (a resharded restore reads a subset of
-        # the saved shards — only intersecting extents are requested).
+        # the saved shards — only intersecting extents are requested). A
+        # chunk-reference shard (delta, DESIGN.md §12) contributes its real
+        # chunk extents and sorts by its FIRST chunk's location — the
+        # synthetic entry path names nothing on disk.
+        def _loc(sh):
+            if sh.kind == CHUNK_KIND:
+                return ((sh.chunks[0].path, sh.chunks[0].offset)
+                        if sh.chunks else ("", -1))
+            return (sh.path, sh.offset)
+
         plans = []
         for task in tasks:
             asms: dict[tuple, WindowAssembler] = {}
@@ -227,15 +236,23 @@ class RestorePipeline:
             for asm in asms.values():
                 for sh in asm.pending_shards():
                     extents[(sh.path, sh.offset)] = sh
-            ordered = [extents[k] for k in sorted(extents)]
+            ordered = sorted(extents.values(), key=_loc)
             plans.append((task, asms, ordered))
         # consume in layout order so the stream's staged-byte budget admits
         # reads exactly as earlier results drain (no over-budget escapes)
-        plans.sort(key=lambda p: ((p[2][0].path, p[2][0].offset)
-                                  if p[2] else ("", -1)))
-        reqs = [ReadReq(_extent_req_key(task.key, sh.path, sh.offset),
-                        sh.path, sh.offset, sh.nbytes, obj=task.key)
-                for task, _asms, ordered in plans for sh in ordered]
+        plans.sort(key=lambda p: _loc(p[2][0]) if p[2] else ("", -1))
+        reqs = []
+        for task, _asms, ordered in plans:
+            for sh in ordered:
+                if sh.kind == CHUNK_KIND:
+                    reqs += [ReadReq(_extent_req_key(task.key, r.path,
+                                                     r.offset),
+                                     r.path, r.offset, r.nbytes, obj=task.key)
+                             for r in sh.chunks or ()]
+                else:
+                    reqs.append(ReadReq(
+                        _extent_req_key(task.key, sh.path, sh.offset),
+                        sh.path, sh.offset, sh.nbytes, obj=task.key))
         if on_reqs is not None:
             on_reqs(reqs)
 
@@ -245,8 +262,25 @@ class RestorePipeline:
             for task, asms, ordered in plans:
                 for sh in ordered:
                     t0 = time.perf_counter()
-                    raw = stream.get(
-                        _extent_req_key(task.key, sh.path, sh.offset))
+                    if sh.kind == CHUNK_KIND:
+                        # reassemble the shard payload from its chunk refs
+                        # as they land; per-chunk CRCs were verified inside
+                        # the stream, the whole-payload CRC (under the
+                        # entry's synthetic key) guards the concatenation
+                        from .delta import reassemble_payload
+                        raw = reassemble_payload(
+                            sh, lambda r: stream.get(_extent_req_key(
+                                task.key, r.path, r.offset)))
+                        expect = (crcs or {}).get(_extent_req_key(
+                            task.key, sh.path, sh.offset))
+                        if expect is not None:
+                            got = crc32_of(raw)
+                            if got != expect:
+                                raise ChecksumError(task.key, sh.path,
+                                                    sh.offset, expect, got)
+                    else:
+                        raw = stream.get(
+                            _extent_req_key(task.key, sh.path, sh.offset))
                     t1 = time.perf_counter()
                     metrics.read_stall_seconds += t1 - t0
                     if task.quantized:

@@ -46,7 +46,7 @@ from .buffers import (AlignedBuffer, BufferPool, PAGE, StageBudget, align_up,
                       aligned_span)
 from .io_engine import (EngineStats, IOEngine, IORequest, OP_READ, OP_WRITE,
                         make_engine, open_for, resolve_backend)
-from .manifest import MANIFEST_NAME, Manifest
+from .manifest import CHUNK_KIND, MANIFEST_NAME, Manifest
 
 
 @dataclass
@@ -565,9 +565,19 @@ class RestorePrefetcher:
             ivs = fetched.get(path)
             return ivs is not None and ivs.covers(off, off + n)
 
+        def extents(rec):
+            """Real on-disk extents of a record: chunk-reference shards
+            (delta, §12) resolve to their chunk extents — the synthetic
+            entry path names nothing fetchable."""
+            for sh in rec.shards:
+                if sh.kind == CHUNK_KIND:
+                    yield from (sh.chunks or ())
+                else:
+                    yield sh
+
         complete = all(
-            covered(sh.path, sh.offset, sh.nbytes)
-            for rec in manifest.tensors.values() for sh in rec.shards
+            covered(x.path, x.offset, x.nbytes)
+            for rec in manifest.tensors.values() for x in extents(rec)
         ) and all(covered(b.path, b.offset, b.nbytes)
                   for b in manifest.blobs.values())
         if not complete:

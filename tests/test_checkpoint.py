@@ -132,3 +132,20 @@ def test_missing_checkpoint_raises(tmp_ckpt_dir):
     with CheckpointManager(tmp_ckpt_dir) as mgr:
         with pytest.raises(FileNotFoundError):
             mgr.restore()
+
+
+def test_keep_none_retains_every_step(tmp_ckpt_dir):
+    state = _state()
+    with CheckpointManager(tmp_ckpt_dir, keep=None) as mgr:
+        for s in (1, 2, 3, 4, 5):
+            mgr.save(s, state)
+        assert mgr.all_steps() == [1, 2, 3, 4, 5]
+
+
+def test_keep_zero_rejected(tmp_ckpt_dir):
+    """keep=0 used to silently mean "keep everything"; it is now an
+    explicit error steering callers to keep=None."""
+    with pytest.raises(ValueError, match="keep=None"):
+        CheckpointManager(tmp_ckpt_dir, keep=0)
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointManager(tmp_ckpt_dir, keep=-3)

@@ -1,0 +1,388 @@
+"""Content-addressed delta checkpointing (core.delta, DESIGN.md §12):
+chunk/hash/diff planning, chunk-reference manifests, store publish,
+refcounted retention GC (incl. the in-flight-save concurrency guarantee),
+and composition with quantization, multi-writer, and multi-level."""
+
+import glob
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, EngineConfig, Manifest,
+                        ManifestError, MultiLevelCheckpointer,
+                        MultiWriterCheckpointer)
+from repro.core import delta as delta_mod
+from repro.core.manifest import CHUNK_KIND
+
+
+def _state(rng, n=3, rows=256, cols=128):
+    return {"params": {
+        f"w{i}": rng.standard_normal((rows, cols)).astype(np.float32)
+        for i in range(n)}, "step": 0}
+
+
+def _assert_equal(tree, state):
+    for k, v in state["params"].items():
+        assert np.array_equal(tree["params"][k], v), k
+
+
+def _packs(d):
+    return sorted(glob.glob(os.path.join(
+        d, delta_mod.CHUNKSTORE_DIR, delta_mod.PACK_SUBDIR, "*")))
+
+
+CHUNK = 16 << 10   # small grid so small test tensors span many chunks
+
+
+# ----------------------------------------------------------- save/restore
+def test_delta_roundtrip_and_dirty_scaling(tmp_ckpt_dir, rng):
+    state = _state(rng)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        m0 = mgr.save(0, state)
+        assert m0.mode == "delta-blocking"
+        assert m0.chunks_dirty == m0.chunks_total > 0
+        assert m0.written_bytes == m0.total_bytes
+        orig_rows = state["params"]["w1"][:2].copy()
+        # touch two rows of one tensor: only its chunks rewrite
+        state["params"]["w1"][:2] += 1.0
+        state["step"] = 1
+        m1 = mgr.save(1, state)
+        assert 0 < m1.chunks_dirty < m1.chunks_total
+        assert m1.written_bytes < m0.written_bytes / 4
+        out = mgr.restore(step=1)
+        _assert_equal(out, state)
+        assert out["step"] == 1
+        # the older step still restores (its chunks are still referenced)
+        out0 = mgr.restore(step=0)
+        assert np.array_equal(out0["params"]["w1"][:2], orig_rows)
+
+
+def test_delta_identical_state_writes_only_metadata(tmp_ckpt_dir, rng):
+    state = _state(rng, n=2)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+        m1 = mgr.save(1, state)
+        assert m1.chunks_dirty == 0
+        # only the lean blob is written
+        assert m1.written_bytes < 4096
+        _assert_equal(mgr.restore(step=1), state)
+
+
+def test_delta_manifest_entries_reference_store(tmp_ckpt_dir, rng):
+    state = _state(rng, n=1)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+        man = Manifest.load(os.path.join(tmp_ckpt_dir, "step_00000000"))
+        assert man.format_version == 3
+        (rec,) = [r for k, r in man.tensors.items()]
+        for sh in rec.shards:
+            assert sh.kind == CHUNK_KIND
+            assert sh.chunks and sum(r.nbytes for r in sh.chunks) == sh.nbytes
+            for r in sh.chunks:
+                assert r.path.startswith(delta_mod.STORE_PREFIX)
+                assert len(r.hash) == 32    # blake2b-128 hex
+        # step dir holds only metadata; payload lives in the store
+        files = os.listdir(os.path.join(tmp_ckpt_dir, "step_00000000"))
+        assert files == ["manifest.json"]
+        assert len(_packs(tmp_ckpt_dir)) == 1
+
+
+def test_delta_monolithic_restore_parity(tmp_ckpt_dir, rng):
+    state = _state(rng)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+        state["params"]["w0"][5:7] -= 3.0
+        mgr.save(1, state)
+    with CheckpointManager(tmp_ckpt_dir, streaming=False,
+                           keep=None) as mono:
+        _assert_equal(mono.restore(step=1), state)
+
+
+def test_delta_quantized_roundtrip(tmp_ckpt_dir, rng):
+    """Delta chunks the PACKED payload; restore matches a full quantized
+    save bit-for-bit (quantization is lossy, delta must not add to it)."""
+    state = {"opt": {"mu": rng.standard_normal((512, 64)).astype(np.float32)},
+             "w": rng.standard_normal((64, 64)).astype(np.float32)}
+    kw = dict(quantize_prefixes=("opt/",), quantize_min_bytes=1024,
+              keep=None)
+    with CheckpointManager(tmp_ckpt_dir, delta=True,
+                           delta_chunk_bytes=CHUNK, **kw) as mgr:
+        m0 = mgr.save(0, state)
+        state["opt"]["mu"][:1] += 0.5
+        m1 = mgr.save(1, state)
+        assert m1.written_bytes < m0.written_bytes
+        got = mgr.restore(step=1)
+    with CheckpointManager(tmp_ckpt_dir + "_full", **kw) as ref:
+        ref.save(1, state)
+        want = ref.restore(step=1)
+    assert np.array_equal(got["opt"]["mu"], want["opt"]["mu"])
+    assert np.array_equal(got["w"], want["w"])
+
+
+def test_delta_async_save_hash_off_blocking_path(tmp_ckpt_dir, rng):
+    state = _state(rng, rows=2048)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, async_save=True,
+                           keep=None, delta_chunk_bytes=CHUNK) as mgr:
+        m = mgr.save(0, state)
+        # hash pass runs on the worker: not yet accounted when save returns
+        blocked = m.blocking_seconds
+        mgr.wait()
+        assert m.hash_seconds > 0.0
+        assert blocked < m.end_to_end_seconds
+        state["params"]["w2"][-2:] *= 2.0
+        mgr.save(1, state)
+        mgr.wait()
+        _assert_equal(mgr.restore(step=1), state)
+
+
+def test_delta_requires_streaming(tmp_ckpt_dir):
+    with pytest.raises(ValueError, match="streaming"):
+        CheckpointManager(tmp_ckpt_dir, delta=True, streaming=False)
+
+
+def test_delta_chunk_size_change_degrades_to_full(tmp_ckpt_dir, rng):
+    state = _state(rng, n=1)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK * 2) as mgr:
+        m = mgr.save(1, state)
+        assert m.chunks_dirty == m.chunks_total   # no index match: full write
+        _assert_equal(mgr.restore(step=1), state)
+
+
+def test_delta_crc_detects_store_corruption(tmp_ckpt_dir, rng):
+    from repro.core import ChecksumError
+    state = _state(rng, n=1)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+        state["params"]["w0"][:1] += 1.0
+        mgr.save(1, state)
+        # flip a byte inside the step-0 pack (a chunk step 1 references)
+        pack_files = glob.glob(os.path.join(_packs(tmp_ckpt_dir)[0],
+                                            "**", "*.bin"), recursive=True)
+        with open(pack_files[0], "r+b") as f:
+            f.seek(CHUNK + 17)
+            b = f.read(1)
+            f.seek(CHUNK + 17)
+            f.write(bytes([b[0] ^ 0xFF]))
+        with pytest.raises(ChecksumError):
+            mgr.restore(step=1)
+
+
+# ------------------------------------------------------------ retention GC
+def test_gc_refcount_keeps_referenced_reaps_orphans(tmp_ckpt_dir, rng):
+    state = _state(rng, n=2)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=2,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.delta_gc_grace_s = 0.0
+        for s in range(5):
+            state["params"]["w0"][s:s + 1] += 1.0
+            mgr.save(s, state)
+        assert mgr.all_steps() == [3, 4]
+        gc = mgr.last_gc_stats
+        assert gc is not None and gc.kept > 0
+        # step 0's pack survives: steps 3/4 still reference its clean chunks
+        refs = set(gc.refcounts)
+        assert any("step_00000000" in r for r in refs)
+        # dropped intermediate steps' packs were reaped once unreferenced
+        packs = _packs(tmp_ckpt_dir)
+        assert all(os.path.basename(p).startswith(
+            ("step_00000000", "step_00000003", "step_00000004"))
+            for p in packs)
+        _assert_equal(mgr.restore(step=4), state)
+
+
+def test_gc_keep_none_retains_everything(tmp_ckpt_dir, rng):
+    state = _state(rng, n=1)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.delta_gc_grace_s = 0.0
+        for s in range(4):
+            state["params"]["w0"][s:s + 1] += 1.0
+            mgr.save(s, state)
+        assert mgr.all_steps() == [0, 1, 2, 3]
+        assert len(_packs(tmp_ckpt_dir)) == 4
+        gc = mgr.last_gc_stats
+        assert gc.deleted == 0
+
+
+def test_gc_grace_spares_young_orphans(tmp_ckpt_dir, rng):
+    state = _state(rng, n=1)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=1,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        # default grace: orphaned packs too young to reap survive
+        state["params"]["w0"][:] = 1.0    # fully dirty → step 0 pack orphan
+        mgr.save(0, state)
+        state["params"]["w0"][:] = 2.0
+        mgr.save(1, state)
+        assert mgr.all_steps() == [1]
+        assert len(_packs(tmp_ckpt_dir)) == 2   # young orphan spared
+        delta_mod.gc_store(tmp_ckpt_dir, grace_s=0.0)
+        assert len(_packs(tmp_ckpt_dir)) == 1   # now reaped
+
+
+def test_gc_never_reaps_chunks_referenced_by_inflight_save(tmp_ckpt_dir,
+                                                           rng):
+    """The §12 acceptance concurrency case: a refcount GC pass racing an
+    in-flight ASYNC delta save must not delete any chunk a kept (or
+    about-to-commit) step references — restores stay bit-exact."""
+    state = _state(rng, n=2, rows=2048)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=2,
+                           async_save=True,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.delta_gc_grace_s = 0.0
+        mgr.save(0, state)
+        mgr.wait()
+        stop = threading.Event()
+        errs: list = []
+
+        def hammer():
+            # an adversarial concurrent GC (as a second manager's startup
+            # or commit would run it) while the save is in flight
+            while not stop.is_set():
+                try:
+                    delta_mod.gc_store(tmp_ckpt_dir, grace_s=0.0)
+                except Exception as e:  # noqa: BLE001
+                    errs.append(e)
+                time.sleep(0.001)
+
+        th = threading.Thread(target=hammer)
+        th.start()
+        try:
+            for s in range(1, 4):
+                state["params"]["w1"][s:s + 2] += 1.0
+                mgr.save(s, state)
+                mgr.wait()
+        finally:
+            stop.set()
+            th.join()
+        assert not errs
+        _assert_equal(mgr.restore(step=3), state)
+        # older kept step restores too — no referenced chunk was reaped
+        mgr.restore(step=2)
+
+
+def test_gc_pins_inflight_tmp_manifests(tmp_path, rng):
+    """A live .tmp-* dir whose staged manifest references store chunks pins
+    them even when no committed step does (cross-manager window)."""
+    import shutil
+    d = str(tmp_path / "ckpt")
+    state = _state(rng, n=1)
+    with CheckpointManager(d, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+    # simulate an in-flight save that already staged its manifest: move the
+    # committed step to a live-owned tmp dir
+    from repro.core.checkpoint import write_owner
+    src = os.path.join(d, "step_00000000")
+    tmp = os.path.join(d, "step_00000000.tmp-test")
+    shutil.move(src, tmp)
+    write_owner(tmp)
+    stats = delta_mod.gc_store(d, grace_s=0.0)
+    assert stats.deleted == 0 and stats.kept == stats.scanned > 0
+    # without the pin, everything is an orphan
+    os.remove(os.path.join(tmp, ".owner.pid"))
+    os.remove(os.path.join(tmp, "manifest.json"))
+    stats = delta_mod.gc_store(d, grace_s=0.0)
+    assert stats.deleted > 0
+
+
+# ------------------------------------------------------------- composition
+def test_delta_multiwriter_merge_and_restore(tmp_ckpt_dir, rng):
+    state = _state(rng, n=3, rows=512)
+    with MultiWriterCheckpointer(
+            tmp_ckpt_dir, 4, config=EngineConfig(strategy="single_file"),
+            delta=True, delta_chunk_bytes=CHUNK, keep=None) as mw:
+        m0 = mw.save(0, state)
+        state["params"]["w0"][:2] += 1.0          # rank 0's partition
+        state["params"]["w2"][-2:] += 1.0         # last rank's partition
+        m1 = mw.save(1, state)
+        w0 = sum(r.written_bytes for r in m0.per_rank)
+        w1 = sum(r.written_bytes for r in m1.per_rank)
+        assert w1 < w0 / 4
+        # per-rank chunk indexes merged by rank 0 into one manifest
+        man = Manifest.load(os.path.join(tmp_ckpt_dir, "step_00000001"))
+        assert sorted(man.extra["merged_ranks"]) == [0, 1, 2, 3]
+        chunked = [sh for rec in man.tensors.values() for sh in rec.shards
+                   if sh.kind == CHUNK_KIND]
+        assert chunked and all(
+            r.path.startswith(delta_mod.STORE_PREFIX)
+            for sh in chunked for r in (sh.chunks or ()))
+        _assert_equal(mw.restore(step=1), state)
+        # elastic: the 4-writer delta checkpoint restores on a 2-rank mesh
+        from repro.core import LocalShard
+        trees = mw.restore_sharded(2, step=1)
+        for k, want in state["params"].items():
+            got = np.zeros_like(want)
+            for tree in trees:
+                leaf = tree["params"][k]
+                if isinstance(leaf, LocalShard):
+                    lo, hi = leaf.index[0]
+                    got[lo:hi] = leaf.data
+                else:
+                    got[:] = leaf
+            assert np.array_equal(got, want), k
+
+
+def test_delta_multilevel_flush_skips_resident_chunks(tmp_path, rng):
+    l0, l1 = str(tmp_path / "l0"), str(tmp_path / "l1")
+    state = _state(rng, n=2, rows=512)
+    with MultiLevelCheckpointer(l0, l1, delta=True, keep=None,
+                                delta_chunk_bytes=CHUNK) as ml:
+        ml.save(0, state)
+        ml.wait()
+        s0 = ml.last_flush_stats
+        assert s0.chunks_flushed > 0 and s0.chunks_skipped == 0
+        state["params"]["w1"][3:5] *= 0.5
+        ml.save(1, state)
+        ml.wait()
+        s1 = ml.last_flush_stats
+        # the step-0 pack is already resident at level 1: never re-flushed
+        assert s1.chunks_skipped >= 1
+        assert s1.chunks_flushed >= 1
+    # node loss: fresh level 0 restores the delta step from level 1 alone
+    import shutil
+    shutil.rmtree(l0)
+    with MultiLevelCheckpointer(l0, l1, delta=True, keep=None,
+                                delta_chunk_bytes=CHUNK) as ml2:
+        out = ml2.restore(step=1)
+        _assert_equal(out, state)
+        # full-coverage prefetch promoted the step to level 0
+        assert 1 in ml2.local.all_steps()
+        _assert_equal(ml2.local.restore(step=1), state)
+
+
+# ------------------------------------------- manifest compat / fallback
+def test_restore_falls_back_past_unknown_entry_kind(tmp_ckpt_dir, rng):
+    """A newer writer's manifest (unknown shard kind) raises typed
+    ManifestError on this reader; latest-step restore falls back to the
+    next-older valid step instead of dying."""
+    import json
+    state = _state(rng, n=1)
+    with CheckpointManager(tmp_ckpt_dir, delta=True, keep=None,
+                           delta_chunk_bytes=CHUNK) as mgr:
+        mgr.save(0, state)
+        newer = _state(rng, n=1)
+        mgr.save(1, newer)
+        mpath = os.path.join(tmp_ckpt_dir, "step_00000001", "manifest.json")
+        with open(mpath) as f:
+            doc = json.load(f)
+        for rec in doc["tensors"].values():
+            for sh in rec["shards"]:
+                sh["kind"] = "erasure-coded-v9"
+        with open(mpath, "w") as f:
+            json.dump(doc, f)
+        with pytest.raises(ManifestError):
+            mgr.restore(step=1)
+        out = mgr.restore()          # falls back to step 0
+        _assert_equal(out, state)

@@ -163,3 +163,54 @@ def test_future_format_rejected():
 def test_crc():
     assert crc32_of(b"hello") == crc32_of(bytearray(b"hello"))
     assert crc32_of(b"hello") != crc32_of(b"hellp")
+
+
+# ------------------------------------------ forward/backward compatibility
+def test_chunk_entry_roundtrip():
+    from repro.core.manifest import CHUNK_KIND, ChunkRef
+    m = Manifest(step=1, num_ranks=1, strategy="single_file")
+    refs = (ChunkRef("ab" * 16, "../chunkstore/packs/p0/data/c.bin", 0,
+                     256, 7),
+            ChunkRef("cd" * 16, "data/c.bin", 4096, 128, 9))
+    m.add_shard("w", "float32", (8, 8),
+                ShardEntry(((0, 8), (0, 8)), "<chunks:deadbeef>", 0, 384,
+                           42, CHUNK_KIND, refs))
+    m2 = Manifest.loads(m.dumps())
+    sh = m2.tensors["w"].shards[0]
+    assert sh.kind == CHUNK_KIND and sh.chunks == refs
+    assert sh.crc32 == 42 and sh.nbytes == 384
+
+
+def test_format_version_floats_with_content():
+    """Non-delta manifests stay at the base version (old readers keep
+    loading them); chunk entries bump to v3."""
+    from repro.core.manifest import (BASE_FORMAT_VERSION, CHUNK_KIND,
+                                     ChunkRef, FORMAT_VERSION)
+    m = _manifest()
+    assert m.to_json()["format_version"] == BASE_FORMAT_VERSION
+    m.add_shard("d", "uint8", (4,),
+                ShardEntry(((0, 4),), "<chunks:x>", 0, 4, None, CHUNK_KIND,
+                           (ChunkRef("00" * 16, "../chunkstore/p", 0, 4),)))
+    assert m.to_json()["format_version"] == FORMAT_VERSION
+
+
+def test_unknown_entry_kind_raises_typed():
+    """A manifest written by a NEWER writer with an entry kind this reader
+    does not understand raises ManifestError — not KeyError — so the
+    latest-step fallback can skip it."""
+    import json
+    m = _manifest()
+    doc = m.to_json()
+    doc["tensors"]["w"]["shards"][0]["kind"] = "parity-raid7"
+    with pytest.raises(ManifestError, match="unknown shard entry kind"):
+        Manifest.loads(json.dumps(doc).encode())
+    # unknown kinds never silently pass as extents
+    doc["tensors"]["w"]["shards"][0]["kind"] = "extent"
+    Manifest.loads(json.dumps(doc).encode())
+
+
+def test_future_format_raises_typed_manifest_error():
+    m = _manifest()
+    m.format_version = 99
+    with pytest.raises(ManifestError, match="future"):
+        Manifest.loads(m.dumps())
