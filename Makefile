@@ -1,19 +1,27 @@
 PY ?= python
 
-.PHONY: verify test bench-smoke bench-restore-smoke bench-concurrency-smoke \
-	bench-delta-smoke
+.PHONY: verify test chaos bench-smoke bench-restore-smoke \
+	bench-concurrency-smoke bench-delta-smoke
 
-# The ROADMAP tier-1 gate plus the save-, restore-, concurrency, and delta
-# smoke benchmarks: regressions in the test suite, pipelined blocking time,
-# streaming restore (wall-clock, staging bound, bit-identity), the
+# The ROADMAP tier-1 gate plus the chaos gate and the save-, restore-,
+# concurrency, and delta smoke benchmarks: regressions in the test suite,
+# crash/corruption invariants under injected faults, pipelined blocking
+# time, streaming restore (wall-clock, staging bound, bit-identity), the
 # multi-writer commit protocol (one committed dir, merged manifest,
 # elastic bit-identity), or delta checkpointing (1%-dirty save writes
 # <=10% of full bytes, bit-identical restore, refcount GC) fail loudly.
-verify: test bench-smoke bench-restore-smoke bench-concurrency-smoke \
+verify: test chaos bench-smoke bench-restore-smoke bench-concurrency-smoke \
 	bench-delta-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Seeded fault-injection campaign (DESIGN.md §13): >=200 faults per fixed
+# seed across the delta x multiwriter x multilevel matrix, zero invariant
+# violations, < 60 s. CHAOS_ITERS=N appends N extra random-seed campaigns
+# (nightly soak; each seed is printed for reproduction).
+chaos:
+	PYTHONPATH=src $(PY) tests/chaos/campaign.py
 
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_train_overhead --smoke

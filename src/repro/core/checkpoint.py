@@ -51,6 +51,7 @@ import jax
 import numpy as np
 
 from . import delta as delta_mod
+from . import faults
 from .aggregation import ObjectSpec, Strategy, rank_padded_total
 from .engines import (ChecksumError, EngineConfig, ReadReq, SaveItem,
                       make_cr_engine)
@@ -93,18 +94,20 @@ def replace_dir(tmp: str, final: str) -> None:
     for _attempt in range(5):
         if os.path.exists(final):
             aside = f"{final}.tmp-old-{uuid.uuid4().hex[:8]}"
-            os.replace(final, aside)
+            faults.replace(final, aside)
             asides.append(aside)
         try:
-            os.replace(tmp, final)
+            faults.replace(tmp, final)
             break
+        except (faults.InjectedCrash, faults.InjectedIOError):
+            raise      # injected faults must not be absorbed by the retry
         except OSError:
             continue
     else:
         raise OSError(f"could not publish {tmp} over {final}")
     fd = os.open(os.path.dirname(final) or ".", os.O_RDONLY)
     try:
-        os.fsync(fd)
+        faults.fsync(fd)
     finally:
         os.close(fd)
     for aside in asides:
@@ -115,6 +118,28 @@ def write_owner(tmp: str) -> None:
     import socket
     with open(os.path.join(tmp, OWNER_NAME), "w") as f:
         f.write(f"{os.getpid()} {time.time():.3f} {socket.gethostname()}")
+
+
+def _proc_start_time(pid: int) -> float | None:
+    """Epoch seconds the process with ``pid`` started, via /proc (Linux).
+    None when unknowable (no procfs, pid gone, unparsable)."""
+    try:
+        with open(f"/proc/{pid}/stat", "rb") as f:
+            stat = f.read()
+        btime = None
+        with open("/proc/stat", "rb") as f:
+            for line in f:
+                if line.startswith(b"btime "):
+                    btime = int(line.split()[1])
+                    break
+        if btime is None:
+            return None
+        # split after the last ')': the comm field may itself hold spaces
+        fields = stat[stat.rindex(b")") + 2:].split()
+        ticks = int(fields[19])           # starttime: overall field 22
+        return btime + ticks / os.sysconf("SC_CLK_TCK")
+    except (OSError, ValueError, IndexError):
+        return None
 
 
 def _dir_is_young(path: str) -> bool:
@@ -143,11 +168,23 @@ def tmp_in_flight(path: str) -> bool:
         return True        # another manager/rank in THIS process
     try:
         os.kill(pid, 0)
-        return True
     except ProcessLookupError:
         return False       # owner died: stale, safe to reap
     except PermissionError:
-        return True        # exists, owned by another user
+        pass               # exists, owned by another user: check recycling
+    # the pid is alive — but pids recycle. A process that STARTED after the
+    # owner record was written cannot be the writer: the owner died and an
+    # unrelated process inherited its pid. Only claim staleness when procfs
+    # gives a definitive start time; otherwise stay conservative (spare).
+    try:
+        recorded = float(parts[1])
+    except (ValueError, IndexError):
+        recorded = None
+    if recorded is not None:
+        started = _proc_start_time(pid)
+        if started is not None and started > recorded + 1.0:
+            return False   # recycled pid: the recording save is long dead
+    return True
 
 
 def parse_dtype(name: str) -> np.dtype:
@@ -337,7 +374,7 @@ class CheckpointManager:
                 final = os.path.join(self.directory, m.group(1))
                 if Manifest.exists(full) and not os.path.exists(final):
                     try:
-                        os.replace(full, final)   # publish crashed: roll back
+                        faults.replace(full, final)  # publish crashed: roll back
                         continue
                     except OSError:
                         # a LIVE publisher landed the new version between our
@@ -684,6 +721,7 @@ class CheckpointManager:
     def _restore_from(self, ckpt: str, step: int, state_template, shardings,
                       prefetch, t_start: float, window_fn=None):
         manifest = Manifest.load(ckpt)
+        faults.check_quarantined(ckpt, manifest)
         metrics = RestoreMetrics(
             step=step, mode="streaming" if self.streaming else "monolithic")
 

@@ -51,6 +51,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from . import faults
 from .engines import SaveSpec
 from .engines.base import as_u8
 from .manifest import (CHUNK_KIND, ChunkRef, Manifest, ManifestError,
@@ -281,7 +282,7 @@ def apply_plan(stream_manifest: Manifest, plan: DeltaPlan) -> Manifest:
 def _fsync_dir(path: str) -> None:
     fd = os.open(path, os.O_RDONLY)
     try:
-        os.fsync(fd)
+        faults.fsync(fd)
     finally:
         os.close(fd)
 
@@ -344,13 +345,25 @@ def publish_packs(manifest: Manifest, tmp: str, root: str, tag: str) -> bool:
     # 2. land the rewritten manifest in the pinning tmp dir FIRST: the refs
     # exist on disk before any file they name becomes reapable
     manifest.save(tmp)
-    # 3. now move the payload files into the store
+    # 3. now move the payload files into the store. A concurrent gc_store
+    # prunes EMPTY pack dirs (os.rmdir), so the freshly made dir can vanish
+    # between makedirs and replace — retry until the rename lands; once the
+    # first file is in, the dir is non-empty and unprunable, so this
+    # converges (the retry bound only guards against programming errors).
     dirs_to_sync = set()
     for rel in sorted(fresh):
         src = os.path.join(tmp, rel)
         dst = os.path.join(pack_dir, rel)
-        os.makedirs(os.path.dirname(dst), exist_ok=True)
-        os.replace(src, dst)
+        for _ in range(100):
+            try:
+                os.makedirs(os.path.dirname(dst), exist_ok=True)
+                faults.replace(src, dst)
+                break
+            except FileNotFoundError:
+                if not os.path.exists(src):
+                    raise
+        else:
+            raise OSError(f"pack dir kept vanishing under {dst!r}")
         dirs_to_sync.add(os.path.dirname(dst))
     for d in sorted(dirs_to_sync, reverse=True):
         _fsync_dir(d)

@@ -15,6 +15,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from .. import faults
 from ..aggregation import Extent, ObjectSpec, Strategy, WritePlan, plan_layout, rank_padded_total
 from ..buffers import AlignedBuffer, BufferPool, PAGE, align_up
 from ..io_engine import (IOEngine, IORequest, OP_READ, OP_WRITE, make_engine,
@@ -416,7 +417,7 @@ class CREngine:
                 off, length = (regions or {}).get(path, (0, size))
                 try:
                     if length:
-                        os.posix_fallocate(fd, off, length)
+                        faults.posix_fallocate(fd, off, length)
                 except OSError:
                     pass
             fds[path] = fd

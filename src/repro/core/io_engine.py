@@ -21,6 +21,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 
+from . import faults
 from .buffers import AlignedBuffer, PAGE, align_up
 from .uring import IoUring, probe_io_uring
 
@@ -128,9 +129,9 @@ class IOEngine:
 
     def fsync(self, fd: int, datasync: bool = True) -> None:
         if datasync:
-            os.fdatasync(fd)
+            faults.fdatasync(fd)
         else:
-            os.fsync(fd)
+            faults.fsync(fd)
 
     def close(self) -> None:
         pass
@@ -282,24 +283,26 @@ class ThreadPoolEngine(IOEngine):
 
     @staticmethod
     def _do(r: IORequest) -> int:
+        # syscalls route through the fault-injection shims (pass-through
+        # when no FaultPlan is armed) — also the PosixEngine's data path
         if r.op == OP_WRITE:
             mv = r.view()
             total = 0
             while total < r.nbytes:
-                total += os.pwrite(r.fd, mv[total:], r.offset + total)
+                total += faults.pwrite(r.fd, mv[total:], r.offset + total)
             return total
         elif r.op == OP_READ:
             # preadv fills the caller's (aligned) buffer — required for O_DIRECT
             mv = r.view()
             total = 0
             while total < r.nbytes:
-                n = os.preadv(r.fd, [mv[total:]], r.offset + total)
+                n = faults.preadv(r.fd, [mv[total:]], r.offset + total)
                 if n == 0:
                     raise EOFError(f"pread hit EOF at {r.offset + total}")
                 total += n
             return total
         elif r.op == OP_FSYNC:
-            os.fdatasync(r.fd)
+            faults.fdatasync(r.fd)
             return 0
         raise ValueError(r.op)
 

@@ -277,13 +277,14 @@ class Manifest:
             raise ManifestError(f"corrupt manifest: {e}") from e
 
     def _write(self, path: str) -> None:
+        from . import faults   # runtime: faults imports ManifestError above
         payload = self.dumps()
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
-            f.write(payload)
+            faults.file_write(f, payload)
             f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
+            faults.fsync(f.fileno())
+        faults.replace(tmp, path)
 
     def save(self, ckpt_dir: str) -> None:
         self._write(os.path.join(ckpt_dir, MANIFEST_NAME))

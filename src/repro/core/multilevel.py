@@ -31,6 +31,7 @@ from concurrent.futures import ThreadPoolExecutor, wait, FIRST_COMPLETED
 from dataclasses import dataclass, field
 
 from . import delta as delta_mod
+from . import faults
 from .checkpoint import CheckpointManager, replace_dir, step_dir_name
 from .manifest import Manifest, ManifestError
 from .tiered import RestorePrefetcher, TieredTransferEngine
@@ -61,8 +62,8 @@ def _default_copy(src: str, dst: str) -> None:
     with open(src, "rb") as fi, open(tmp, "wb") as fo:
         shutil.copyfileobj(fi, fo, length=8 << 20)
         fo.flush()
-        os.fsync(fo.fileno())
-    os.replace(tmp, dst)
+        faults.fsync(fo.fileno())
+    faults.replace(tmp, dst)
 
 
 class MultiLevelCheckpointer:
@@ -199,7 +200,7 @@ class MultiLevelCheckpointer:
             stats.backend = ts.backend
             stats.per_tier = ts.per_tier()
         for _src, tmp, fin in store_pairs:
-            os.replace(tmp, fin)
+            faults.replace(tmp, fin)
         # the shared displaced-aside publish: a re-flush of an existing
         # remote step never leaves a window where the previous copy is gone
         # before the new one landed
@@ -236,7 +237,7 @@ class MultiLevelCheckpointer:
                 if err is None:
                     if attempts[winner] == "hedge":
                         stats.hedge_wins += 1
-                        os.replace(dst + ".hedge", dst)
+                        faults.replace(dst + ".hedge", dst)
                     return
                 del attempts[winner]
                 if not attempts:  # all attempts failed
@@ -249,7 +250,7 @@ class MultiLevelCheckpointer:
                 # a winning hedge is moved into place
                 deadline = None
             if hedged and os.path.exists(dst + ".hedge"):
-                os.replace(dst + ".hedge", dst)
+                faults.replace(dst + ".hedge", dst)
                 return
 
     # --------------------------------------------------------------- restore

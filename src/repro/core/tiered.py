@@ -41,6 +41,7 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
+from . import faults
 from .aggregation import Extent, chunk_extents
 from .buffers import (AlignedBuffer, BufferPool, PAGE, StageBudget, align_up,
                       aligned_span)
@@ -212,7 +213,7 @@ class TieredTransferEngine:
                 src_fds.append(sfd)
                 dst_fds.append(dfd)
                 try:
-                    os.posix_fallocate(dfd, 0, size)
+                    faults.posix_fallocate(dfd, 0, size)
                 except OSError:
                     os.ftruncate(dfd, size)
                 for start, end in intervals:
@@ -585,10 +586,10 @@ class RestorePrefetcher:
             return False
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.replace(staged, final)
+        faults.replace(staged, final)
         fd = os.open(os.path.dirname(final), os.O_RDONLY)
         try:
-            os.fsync(fd)
+            faults.fsync(fd)
         finally:
             os.close(fd)
         return True

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Seeded chaos gate — the ``make chaos`` entry point (DESIGN.md §13).
+
+Runs the deterministic campaign on a fixed seed set and fails loudly on
+any invariant violation or on insufficient fault coverage (>= 200 faults
+must actually fire, spanning every fault kind class). Budgeted well under
+60 s. Set ``CHAOS_ITERS=N`` to append N extra random-seed campaigns (the
+nightly/soak mode); each extra seed is printed so a failure reproduces.
+
+Usage:  PYTHONPATH=src python tests/chaos/campaign.py
+"""
+
+import os
+import sys
+
+from repro.core import chaos
+
+GATE_SEEDS = (0, 42)
+MIN_FAULTS = 200
+# every kind class must appear across the gate run (prefixes of by_kind)
+REQUIRED_KINDS = ("crash:", "torn:", "short:", "errno:", "corrupt:")
+
+
+def main() -> int:
+    seeds = list(GATE_SEEDS)
+    extra = int(os.environ.get("CHAOS_ITERS", "0"))
+    for _ in range(extra):
+        seeds.append(int.from_bytes(os.urandom(4), "little"))
+
+    total = 0
+    kinds: set = set()
+    for seed in seeds:
+        try:
+            stats = chaos.run_campaign(seed, min_faults=MIN_FAULTS)
+        except chaos.InvariantViolation as e:
+            print(f"INVARIANT VIOLATION (seed {seed})\n{e}")
+            return 1
+        print(stats.summary())
+        total += stats.faults
+        kinds.update(stats.by_kind)
+
+    missing = [p for p in REQUIRED_KINDS
+               if not any(k.startswith(p) for k in kinds)]
+    if missing:
+        print(f"FAIL: fault kind classes never fired: {missing}")
+        return 1
+    if total < MIN_FAULTS:
+        print(f"FAIL: only {total} faults fired (< {MIN_FAULTS})")
+        return 1
+    print(f"chaos gate OK: {total} faults across {len(seeds)} seeds, "
+          f"zero invariant violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

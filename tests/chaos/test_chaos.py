@@ -1,0 +1,294 @@
+"""Chaos harness tier-1 tests: fault-plan mechanics, targeted fault
+scenarios over the live checkpoint stack, a small seeded campaign, and the
+two canary tests proving the campaign detects the historical publish/GC
+bugs when their fixes are reverted (DESIGN.md §13)."""
+
+import errno
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import checkpoint as ckpt_mod
+from repro.core import chaos
+from repro.core import delta as delta_mod
+from repro.core import faults
+from repro.core.checkpoint import CheckpointManager
+from repro.core.engines import EngineConfig
+from repro.core.manifest import Manifest, ManifestError
+
+
+def _cfg(strategy="single_file"):
+    return EngineConfig(backend="posix", strategy=strategy, direct=False)
+
+
+def _state(seed=0):
+    r = np.random.default_rng(seed)
+    return {"w": r.standard_normal((64, 8)).astype(np.float32),
+            "b": r.standard_normal(32)}
+
+
+def _fp(state):
+    return {k: (str(np.asarray(v).dtype), np.asarray(v).tobytes())
+            for k, v in state.items()}
+
+
+# ---------------------------------------------------------------- plan units
+def test_fault_fires_at_nth_eligible_call_only():
+    plan = faults.FaultPlan([faults.Fault(faults.OP_WRITE, at=3,
+                                          action=faults.A_ERRNO,
+                                          err=errno.EIO)])
+    f = plan.faults[0]
+    assert plan._consult(faults.OP_WRITE) is None       # 1st
+    assert plan._consult(faults.OP_FSYNC) is None       # other op: not seen
+    assert f.seen == 1
+    assert plan._consult(faults.OP_WRITE) is None       # 2nd
+    hit = plan._consult(faults.OP_WRITE)                # 3rd: fires
+    assert hit is f and f.done
+    assert plan._consult(faults.OP_WRITE) is None       # one-shot
+    assert plan.fired == [f.describe()]
+    assert plan.counts[faults.OP_WRITE] == 4
+
+
+def test_fault_path_filter_gates_eligibility():
+    plan = faults.FaultPlan([faults.Fault(
+        faults.OP_RENAME, at=1, path_contains="manifest")])
+    assert plan._consult(faults.OP_RENAME, "/a/data.bin\x00/a/data2.bin") \
+        is None
+    assert plan._consult(faults.OP_RENAME,
+                         "/a/manifest.json.tmp\x00/a/manifest.json") \
+        is plan.faults[0]
+
+
+def test_fault_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        faults.Fault("chmod")
+    with pytest.raises(ValueError):
+        faults.Fault(faults.OP_WRITE, at=0)
+    with pytest.raises(ValueError):
+        faults.Fault(faults.OP_WRITE, action="explode")
+
+
+def test_inject_rejects_nesting_and_disarms():
+    plan = faults.FaultPlan()
+    with faults.inject(plan):
+        with pytest.raises(RuntimeError):
+            with faults.inject(faults.FaultPlan()):
+                pass
+    # disarmed on exit: shims are pass-through again
+    assert faults._ACTIVE is None
+
+
+def test_shims_are_passthrough_when_unarmed(tmp_path):
+    p = str(tmp_path / "f")
+    fd = os.open(p, os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        assert faults.pwrite(fd, b"abcdef", 0) == 6
+        buf = bytearray(6)
+        assert faults.preadv(fd, [memoryview(buf)], 0) == 6
+        assert bytes(buf) == b"abcdef"
+        faults.fsync(fd)
+        faults.fdatasync(fd)
+    finally:
+        os.close(fd)
+    faults.replace(p, p + ".2")
+    assert os.path.exists(p + ".2")
+
+
+# ------------------------------------------------------- targeted fault tests
+def test_torn_write_crash_preserves_previous_step(tmp_ckpt_dir):
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    s1 = _state(1)
+    mgr.save(1, s1)
+    plan = faults.FaultPlan([faults.Fault(faults.OP_WRITE, at=1,
+                                          action=faults.A_TORN, frac=0.4)])
+    with faults.inject(plan):
+        with pytest.raises(Exception) as ei:
+            mgr.save(2, _state(2))
+    assert any(isinstance(e, faults.InjectedCrash)
+               for e in chaos._chain(ei.value))
+    assert plan.fired
+    mgr.close()
+    faults.simulate_owner_death(tmp_ckpt_dir)
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    assert 1 in v.all_steps()
+    assert _fp(v.restore(step=1)) == _fp(s1)
+    # the torn step either never committed, or committed whole
+    if 2 in v.all_steps():
+        assert _fp(v.restore(step=2)) == _fp(_state(2))
+    v.close()
+
+
+def test_enospc_surfaces_and_manager_survives(tmp_ckpt_dir):
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    plan = faults.FaultPlan([faults.Fault(faults.OP_WRITE, at=2,
+                                          action=faults.A_ERRNO,
+                                          err=errno.ENOSPC)])
+    with faults.inject(plan):
+        with pytest.raises(Exception) as ei:
+            mgr.save(1, _state(1))
+    assert any(isinstance(e, faults.InjectedIOError)
+               and e.errno == errno.ENOSPC for e in chaos._chain(ei.value))
+    # an ENOSPC-failed save must not wedge the manager: retry commits
+    s2 = _state(2)
+    mgr.save(2, s2)
+    assert _fp(mgr.restore(step=2)) == _fp(s2)
+    mgr.close()
+
+
+def test_fsync_crash_never_commits_partial_step(tmp_ckpt_dir):
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    s1 = _state(3)
+    mgr.save(1, s1)
+    plan = faults.FaultPlan([faults.Fault(faults.OP_FSYNC, at=1)])
+    with faults.inject(plan):
+        with pytest.raises(Exception):
+            mgr.save(2, _state(4))
+    mgr.close()
+    faults.simulate_owner_death(tmp_ckpt_dir)
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    assert _fp(v.restore(step=1)) == _fp(s1)
+    v.close()
+
+
+def test_resave_rename_crash_keeps_a_valid_version(tmp_ckpt_dir):
+    """Crashing the publish rename while re-saving an existing step must
+    leave SOME complete version of the step (old or new) restorable —
+    the displaced-aside publish contract."""
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    old = _state(5)
+    mgr.save(1, old)
+    new = _state(6)
+    plan = faults.FaultPlan([faults.Fault(faults.OP_RENAME, at=2)])
+    with faults.inject(plan):
+        try:
+            mgr.save(1, new)
+        except Exception as e:
+            assert any(isinstance(x, faults.InjectedCrash)
+                       for x in chaos._chain(e))
+    mgr.close()
+    faults.simulate_owner_death(tmp_ckpt_dir)
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    assert 1 in v.all_steps()
+    assert _fp(v.restore(step=1)) in (_fp(old), _fp(new))
+    v.close()
+
+
+def test_manifest_zeroed_falls_back_to_previous_step(tmp_ckpt_dir):
+    """Satellite regression: a zero-byte manifest.json raises typed
+    ManifestError on direct load, and latest-step restore falls back."""
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    s1, s2 = _state(7), _state(8)
+    mgr.save(1, s1)
+    mgr.save(2, s2)
+    mgr.close()
+    faults.zero_file(os.path.join(tmp_ckpt_dir, "step_00000002",
+                                  "manifest.json"))
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    with pytest.raises(ManifestError):
+        v.restore(step=2)          # explicit step: typed error propagates
+    assert _fp(v.restore()) == _fp(s1)   # latest-step fallback
+    v.close()
+
+
+# ------------------------------------------------------------ seeded campaign
+def test_campaign_smoke_all_cells():
+    stats = chaos.run_campaign(1234, min_faults=36)
+    assert stats.faults >= 36
+    assert set(stats.by_cell) == set(chaos.CELLS)
+
+
+def test_campaign_is_deterministic_per_trial(tmp_path):
+    a = chaos.run_campaign(9, min_faults=6, max_trials=6,
+                           base_dir=str(tmp_path / "a"))
+    b = chaos.run_campaign(9, min_faults=6, max_trials=6,
+                           base_dir=str(tmp_path / "b"))
+    assert a.by_kind == b.by_kind and a.trials == b.trials
+
+
+# ------------------------------------------------------------------- canaries
+def test_canary_naive_publish_loses_committed_step(tmp_ckpt_dir,
+                                                   monkeypatch):
+    """Revert the displaced-aside publish (PR 4) to naive rmtree+rename:
+    a crash between the two must now lose the committed step — proving
+    the harness would catch the regression. The real publish survives the
+    identical injection (test_resave_rename_crash_keeps_a_valid_version)."""
+    def naive_replace_dir(tmp, final):
+        if os.path.exists(final):
+            shutil.rmtree(final)           # the unprotected window
+        faults.replace(tmp, final)
+    monkeypatch.setattr(ckpt_mod, "replace_dir", naive_replace_dir)
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    mgr.save(1, _state(5))
+    # rename #1 is the manifest tmp-file; #2 is the step-dir publish
+    plan = faults.FaultPlan([faults.Fault(faults.OP_RENAME, at=2)])
+    with faults.inject(plan):
+        with pytest.raises(Exception):
+            mgr.save(1, _state(6))
+    assert plan.fired
+    mgr.close()
+    faults.simulate_owner_death(tmp_ckpt_dir)
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    assert 1 not in v.all_steps(), \
+        "naive publish unexpectedly kept the step — canary lost its teeth"
+    v.close()
+
+
+def test_canary_unpinned_gc_reaps_fresh_chunks(tmp_ckpt_dir, monkeypatch):
+    """Revert the tmp-manifest pinning (PR 5): a refcount GC running while
+    publish_packs moves chunks into the store reaps them, leaving the
+    committed step referencing missing bytes — caught by scrub + restore.
+    Second half: the REAL pinning survives the identical injection."""
+    def committed_only_refs(root):
+        counts: dict = {}
+        for d in sorted(os.listdir(root)):
+            p = os.path.join(root, d)
+            if not (d.startswith("step_") and os.path.isdir(p)
+                    and ".tmp" not in d):
+                continue
+            try:
+                m = Manifest.load(p)
+            except ManifestError:
+                continue
+            for rel in delta_mod.manifest_store_paths(m):
+                counts[rel] = counts.get(rel, 0) + 1
+        return counts
+
+    def run(patch_refs: bool) -> bool:
+        """True when the committed step survives intact."""
+        root = os.path.join(tmp_ckpt_dir, "pinned" if not patch_refs
+                            else "unpinned")
+        with monkeypatch.context() as mp:
+            if patch_refs:
+                mp.setattr(delta_mod, "referenced_store_paths",
+                           committed_only_refs)
+            mgr = CheckpointManager(
+                root, config=_cfg("file_per_tensor"), keep=None,
+                delta=True, delta_chunk_bytes=512)
+            mgr.delta_gc_grace_s = 0.0
+            mgr.save(1, _state(1))
+            gc = lambda: delta_mod.gc_store(root, grace_s=0.0)
+            # by rename #2 into the chunkstore, chunk files from THIS save
+            # are already in the store, referenced only by the tmp manifest
+            plan = faults.FaultPlan([faults.Fault(
+                faults.OP_RENAME, at=2, action=faults.A_CALL, callback=gc,
+                path_contains=delta_mod.CHUNKSTORE_DIR)])
+            with faults.inject(plan):
+                mgr.save(2, _state(2))
+            assert plan.fired, "gc callback never ran: adjust fault site"
+            mgr.close()
+        if not faults.scrub_store(root).clean:
+            return False
+        v = CheckpointManager(root, config=_cfg(), keep=None)
+        try:
+            ok = _fp(v.restore(step=2)) == _fp(_state(2))
+        except Exception:
+            ok = False
+        v.close()
+        return ok
+
+    assert not run(patch_refs=True), \
+        "unpinned GC did not corrupt the step — canary lost its teeth"
+    assert run(patch_refs=False), \
+        "real pinning failed under the same injection"

@@ -1,0 +1,161 @@
+"""CRC scrubber tests: detection of every injected chunkstore corruption,
+level-1 repair, quarantine + typed restore failure (DESIGN.md §13)."""
+
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import delta as delta_mod
+from repro.core import faults
+from repro.core.checkpoint import CheckpointManager
+from repro.core.engines import EngineConfig
+from repro.core.multilevel import MultiLevelCheckpointer
+
+
+def _cfg():
+    return EngineConfig(backend="posix", strategy="file_per_tensor",
+                        direct=False)
+
+
+def _state(seed):
+    r = np.random.default_rng(seed)
+    return {"w": r.standard_normal((128, 16)).astype(np.float32),
+            "emb": r.integers(0, 256, 4096).astype(np.uint8)}
+
+
+def _fp(state):
+    return {k: np.asarray(v).tobytes() for k, v in state.items()}
+
+
+def _delta_mgr(root, **kw):
+    mgr = CheckpointManager(root, config=_cfg(), keep=None, delta=True,
+                            delta_chunk_bytes=1024, **kw)
+    mgr.delta_gc_grace_s = 0.0
+    return mgr
+
+
+def _save_steps(mgr, n=3):
+    fps = {}
+    r = random.Random(7)
+    state = _state(0)
+    for step in range(1, n + 1):
+        mgr.save(step, state)
+        fps[step] = _fp(state)
+        nxt = _state(step)
+        # partial mutation: later steps share clean chunks with earlier ones
+        nxt["emb"] = state["emb"].copy()
+        state = nxt
+    return fps
+
+
+def test_scrub_clean_store_reports_nothing(tmp_ckpt_dir):
+    mgr = _delta_mgr(tmp_ckpt_dir)
+    _save_steps(mgr)
+    mgr.close()
+    rep = faults.scrub_store(tmp_ckpt_dir)
+    assert rep.clean
+    assert rep.files_scanned > 0 and rep.chunks_checked > 0
+    assert not rep.corrupt and not rep.quarantined and not rep.repaired
+
+
+def test_scrub_detects_every_injected_corruption(tmp_ckpt_dir):
+    mgr = _delta_mgr(tmp_ckpt_dir)
+    _save_steps(mgr)
+    mgr.close()
+    refs = faults.referenced_chunks(tmp_ckpt_dir)
+    assert refs, "no store-referenced chunks — scenario broken"
+    rng = random.Random(11)
+    hit = set()
+    store = os.path.join(tmp_ckpt_dir, delta_mod.CHUNKSTORE_DIR)
+    for rel in sorted(refs)[:4]:           # corrupt several distinct files
+        off, nbytes = refs[rel][0][0], refs[rel][0][1]
+        faults.flip_byte(os.path.join(store, rel),
+                         off + rng.randrange(max(nbytes, 1)))
+        hit.add(rel)
+    rep = faults.scrub_store(tmp_ckpt_dir)
+    assert set(rep.corrupt) == hit         # every corruption, nothing else
+    assert set(rep.quarantined) == hit     # no mirror: all quarantined
+    for rel in hit:
+        assert os.path.exists(os.path.join(
+            store, faults.QUARANTINE_SUBDIR, rel))
+        assert not os.path.exists(os.path.join(store, rel))
+
+
+def test_scrub_repairs_from_level1_and_restore_is_bit_exact(tmp_path):
+    local, remote = str(tmp_path / "l0"), str(tmp_path / "l1")
+    ml = MultiLevelCheckpointer(local, remote, config=_cfg(), keep=None,
+                                delta=True, delta_chunk_bytes=1024)
+    ml.local.delta_gc_grace_s = 0.0
+    fps = _save_steps(ml)
+    ml.wait()
+    ml.close()
+    hit = faults.corrupt_store_chunk(local, random.Random(3))
+    assert hit is not None
+    rel, _ = hit
+    rep = faults.scrub_store(local, remote_root=remote)
+    assert rep.corrupt == [rel]
+    assert rep.repaired == [rel] and not rep.quarantined
+    # repaired in place: a second scrub is clean, restores are bit-exact
+    assert faults.scrub_store(local, remote_root=remote).clean
+    v = CheckpointManager(local, config=_cfg(), keep=None)
+    for step, fp in fps.items():
+        assert _fp(v.restore(step=step)) == fp
+    v.close()
+
+
+def test_scrub_quarantine_with_corrupt_mirror_too(tmp_path):
+    """A mirror that is itself corrupt must not be copied in as a repair."""
+    local, remote = str(tmp_path / "l0"), str(tmp_path / "l1")
+    ml = MultiLevelCheckpointer(local, remote, config=_cfg(), keep=None,
+                                delta=True, delta_chunk_bytes=1024)
+    ml.local.delta_gc_grace_s = 0.0
+    _save_steps(ml)
+    ml.wait()
+    ml.close()
+    hit = faults.corrupt_store_chunk(local, random.Random(5))
+    assert hit is not None
+    rel, off = hit
+    faults.flip_byte(os.path.join(remote, delta_mod.CHUNKSTORE_DIR, rel),
+                     off)
+    rep = faults.scrub_store(local, remote_root=remote)
+    assert rep.corrupt == [rel]
+    assert rep.quarantined == [rel] and not rep.repaired
+
+
+def test_restore_after_quarantine_raises_typed_error(tmp_ckpt_dir):
+    mgr = _delta_mgr(tmp_ckpt_dir)
+    fps = _save_steps(mgr)
+    mgr.close()
+    hit = faults.corrupt_store_chunk(tmp_ckpt_dir, random.Random(9))
+    assert hit is not None
+    rel, _ = hit
+    rep = faults.scrub_store(tmp_ckpt_dir)
+    assert rep.quarantined == [rel]
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    outcomes = {}
+    for step, fp in fps.items():
+        try:
+            outcomes[step] = _fp(v.restore(step=step)) == fp
+        except faults.QuarantinedChunkError as e:
+            # typed failure must name the quarantined chunk
+            assert rel in e.store_path
+            outcomes[step] = "typed"
+    # at least one step depended on the chunk; none returned wrong bytes
+    assert "typed" in outcomes.values()
+    assert False not in outcomes.values()
+    v.close()
+
+
+def test_scrub_ignores_unreferenced_files(tmp_ckpt_dir):
+    mgr = _delta_mgr(tmp_ckpt_dir)
+    _save_steps(mgr)
+    mgr.close()
+    stray = os.path.join(tmp_ckpt_dir, delta_mod.CHUNKSTORE_DIR,
+                         delta_mod.PACK_SUBDIR, "stray", "junk.bin")
+    os.makedirs(os.path.dirname(stray))
+    with open(stray, "wb") as f:
+        f.write(os.urandom(256))
+    rep = faults.scrub_store(tmp_ckpt_dir)
+    assert rep.clean                      # unreferenced bytes are GC's job

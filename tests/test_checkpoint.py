@@ -149,3 +149,85 @@ def test_keep_zero_rejected(tmp_ckpt_dir):
         CheckpointManager(tmp_ckpt_dir, keep=0)
     with pytest.raises(ValueError, match="keep"):
         CheckpointManager(tmp_ckpt_dir, keep=-3)
+
+
+# ----------------------------------------------------- _gc_tmp ownership edges
+def _tmp_dir_with_owner(root, owner_line, *, backdate_s=3600.0):
+    """A staged .tmp dir with a hand-written owner record, mtime backdated
+    past TMP_GRACE_S so the age fallback cannot spare it."""
+    from repro.core import checkpoint as ck
+    tmp = os.path.join(root, "step_00000009.tmp-deadbeef")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, ck.OWNER_NAME), "w") as f:
+        f.write(owner_line)
+    old = __import__("time").time() - backdate_s
+    os.utime(tmp, (old, old))
+    return tmp
+
+
+def test_gc_tmp_reaps_recycled_pid_owner(tmp_ckpt_dir):
+    """A stale owner record whose pid has been RECYCLED by a live unrelated
+    process must still be reaped: the pidfile epoch predates that process's
+    /proc start time, proving the recording save is dead."""
+    from repro.core import checkpoint as ck
+    if ck._proc_start_time(1) is None:
+        pytest.skip("no readable procfs start times on this platform")
+    import socket
+    os.makedirs(tmp_ckpt_dir, exist_ok=True)
+    # pid 1 is alive (and is not us); an epoch far before the system booted
+    # is strictly before ANY live process started
+    line = f"1 1.000 {socket.gethostname()}"
+    tmp = _tmp_dir_with_owner(tmp_ckpt_dir, line)
+    assert not ck.tmp_in_flight(tmp)
+    CheckpointManager(tmp_ckpt_dir).close()     # init runs _gc_tmp
+    assert not os.path.exists(tmp)
+
+
+def test_gc_tmp_spares_live_owner_even_when_old(tmp_ckpt_dir):
+    """A genuinely live owner (this process) is spared regardless of dir
+    age — a long-running save must never be reaped out from under."""
+    import socket
+    import time as _t
+    from repro.core import checkpoint as ck
+    os.makedirs(tmp_ckpt_dir, exist_ok=True)
+    line = f"{os.getpid()} {_t.time():.3f} {socket.gethostname()}"
+    tmp = _tmp_dir_with_owner(tmp_ckpt_dir, line)
+    assert ck.tmp_in_flight(tmp)
+    CheckpointManager(tmp_ckpt_dir).close()
+    assert os.path.exists(tmp)
+
+
+def test_gc_tmp_pidfile_unlinked_mid_scan_falls_back_to_age(tmp_ckpt_dir):
+    """When the owner pidfile vanishes between listdir and the ownership
+    probe (publisher removed it at commit), liveness falls back to dir age:
+    young dirs are spared, past-grace dirs are reaped."""
+    import time as _t
+    from repro.core import checkpoint as ck
+    os.makedirs(tmp_ckpt_dir, exist_ok=True)
+    young = os.path.join(tmp_ckpt_dir, "step_00000001.tmp-aaaaaaaa")
+    stale = os.path.join(tmp_ckpt_dir, "step_00000002.tmp-bbbbbbbb")
+    os.makedirs(young)
+    os.makedirs(stale)          # neither has an owner file: the mid-scan
+    old = _t.time() - 3600.0    # unlink means the probe sees none either
+    os.utime(stale, (old, old))
+    assert ck.tmp_in_flight(young)
+    assert not ck.tmp_in_flight(stale)
+    CheckpointManager(tmp_ckpt_dir).close()
+    assert os.path.exists(young)
+    assert not os.path.exists(stale)
+
+
+def test_gc_tmp_foreign_host_owner_judged_by_age(tmp_ckpt_dir):
+    """An owner record from ANOTHER host: its pid is meaningless to this
+    kernel, so only age decides — stale foreign dirs are reaped."""
+    import time as _t
+    from repro.core import checkpoint as ck
+    os.makedirs(tmp_ckpt_dir, exist_ok=True)
+    line = f"{os.getpid()} {_t.time():.3f} not-this-host.example"
+    tmp = _tmp_dir_with_owner(tmp_ckpt_dir, line)
+    assert not ck.tmp_in_flight(tmp)        # old dir, foreign host
+    fresh = os.path.join(tmp_ckpt_dir, "step_00000003.tmp-cccccccc")
+    os.makedirs(fresh)
+    with open(os.path.join(fresh, ck.OWNER_NAME), "w") as f:
+        f.write(line)
+    assert ck.tmp_in_flight(fresh)          # young dir, foreign host

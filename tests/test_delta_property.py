@@ -1,0 +1,138 @@
+"""Property tests for the delta path: diff → dirty-chunk write → restore
+is bit-exact for random dirty masks, grid sizes and dtype mixes, and a
+chunk-grid change degrades to a full rewrite without losing exactness
+(DESIGN.md §12)."""
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import CheckpointManager, EngineConfig
+from repro.core import delta as delta_mod
+from repro.core.manifest import Manifest
+
+DTYPES = ("float32", "float64", "int32", "int16", "uint8")
+
+
+def _cfg():
+    return EngineConfig(backend="posix", strategy="file_per_tensor",
+                        direct=False)
+
+
+def _make_state(specs, seed):
+    r = np.random.default_rng(seed)
+    state = {}
+    for i, (dt, n) in enumerate(specs):
+        dtype = np.dtype(dt)
+        if dtype.kind in "iu":
+            info = np.iinfo(dtype)
+            state[f"t{i}"] = r.integers(info.min, info.max, n,
+                                        dtype=np.int64).astype(dtype)
+        else:
+            state[f"t{i}"] = r.standard_normal(n).astype(dtype)
+    return state
+
+
+def _dirty_mutate(state, chunk_bytes, frac, seed):
+    """Dirty a random subset of each tensor's chunk-grid cells."""
+    r = np.random.default_rng(seed)
+    out = {}
+    for k, v in state.items():
+        a = v.copy()
+        nchunks = max(1, (a.nbytes + chunk_bytes - 1) // chunk_bytes)
+        mask = r.random(nchunks) < frac
+        raw = a.view(np.uint8).reshape(-1)
+        per = max(1, chunk_bytes // a.itemsize) * a.itemsize
+        for c in np.flatnonzero(mask):
+            lo = c * per
+            hi = min(lo + per, raw.shape[0])
+            if lo < raw.shape[0]:
+                raw[lo:hi] = r.integers(0, 256, hi - lo, dtype=np.int64) \
+                    .astype(np.uint8)
+        out[k] = a
+    return out
+
+
+def _fp(state):
+    return {k: (str(np.asarray(v).dtype), np.asarray(v).tobytes())
+            for k, v in sorted(state.items())}
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.sampled_from([256, 1024, 4096]),
+       specs=st.lists(st.tuples(st.sampled_from(DTYPES),
+                                st.integers(min_value=17, max_value=2500)),
+                      min_size=1, max_size=4),
+       dirt=st.lists(st.tuples(st.integers(min_value=0, max_value=2 ** 31),
+                               st.sampled_from([0.0, 0.1, 0.5, 1.0])),
+                     min_size=1, max_size=3))
+def test_delta_roundtrip_bit_exact_random_masks(chunk, specs, dirt,
+                                                tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("dprop"))
+    state = _make_state(specs, seed=1)
+    fps = {}
+    with CheckpointManager(d, config=_cfg(), keep=None, delta=True,
+                           delta_chunk_bytes=chunk) as mgr:
+        mgr.save(1, state)
+        fps[1] = _fp(state)
+        for step, (seed, frac) in enumerate(dirt, start=2):
+            state = _dirty_mutate(state, chunk, frac, seed)
+            mgr.save(step, state)
+            fps[step] = _fp(state)
+        # every committed step restores bit-exactly — clean chunks are
+        # shared through the store, dirty ones rewritten
+        for step, fp in fps.items():
+            assert _fp(mgr.restore(step=step)) == fp
+
+
+@settings(max_examples=6, deadline=None)
+@given(grids=st.sampled_from([(512, 2048), (2048, 512), (1024, 4096)]),
+       spec=st.tuples(st.sampled_from(DTYPES),
+                      st.integers(min_value=600, max_value=5000)))
+def test_delta_grid_change_degrades_to_full_rewrite(grids, spec,
+                                                    tmp_path_factory):
+    """Changing delta_chunk_bytes between saves must invalidate the diff
+    index (no cross-grid chunk reuse) yet stay bit-exact for both steps."""
+    d = str(tmp_path_factory.mktemp("dgrid"))
+    g1, g2 = grids
+    state1 = _make_state([spec, ("float32", 800)], seed=3)
+    with CheckpointManager(d, config=_cfg(), keep=None, delta=True,
+                           delta_chunk_bytes=g1) as mgr:
+        mgr.save(1, state1)
+    state2 = _dirty_mutate(state1, g1, 0.3, seed=4)
+    with CheckpointManager(d, config=_cfg(), keep=None, delta=True,
+                           delta_chunk_bytes=g2) as mgr:
+        mgr.save(2, state2)
+        assert _fp(mgr.restore(step=1)) == _fp(state1)
+        assert _fp(mgr.restore(step=2)) == _fp(state2)
+    m1 = Manifest.load(f"{d}/step_00000001")
+    m2 = Manifest.load(f"{d}/step_00000002")
+    shared = (set(delta_mod.manifest_store_paths(m1))
+              & set(delta_mod.manifest_store_paths(m2)))
+    assert not shared, "cross-grid chunk reuse: the size key must miss"
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunk=st.sampled_from([256, 2048]),
+       seed=st.integers(min_value=0, max_value=2 ** 31))
+def test_delta_unchanged_state_rewrites_nothing_new(chunk, seed,
+                                                    tmp_path_factory):
+    """A bit-identical re-save references only already-stored chunks."""
+    d = str(tmp_path_factory.mktemp("dnoop"))
+    state = _make_state([("float32", 1500), ("uint8", 3000)], seed=seed)
+    with CheckpointManager(d, config=_cfg(), keep=None, delta=True,
+                           delta_chunk_bytes=chunk) as mgr:
+        mgr.save(1, state)
+        mgr.save(2, {k: v.copy() for k, v in state.items()})
+        assert _fp(mgr.restore(step=2)) == _fp(state)
+    m1 = Manifest.load(f"{d}/step_00000001")
+    m2 = Manifest.load(f"{d}/step_00000002")
+    p1 = set(delta_mod.manifest_store_paths(m1))
+    chunked2 = [r for rec in m2.tensors.values() for sh in rec.shards
+                if delta_mod.is_chunked(sh) and sh.chunks
+                for r in sh.chunks]
+    assert chunked2, "delta path not engaged"
+    assert {r.path[len(delta_mod.STORE_PREFIX):] for r in chunked2} <= p1

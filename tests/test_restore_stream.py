@@ -324,3 +324,58 @@ def test_batch_read_is_stream_client(tmp_path, rng):
         assert out[it.key].tobytes() == bytes(memoryview(it.data))
     assert eng.last_restore_stats.io_requests == 1   # one coalesced read
     eng.close()
+
+
+def test_restore_abort_after_injected_engine_error(tmp_ckpt_dir):
+    """A raw EIO (fault-injected at the pread syscall) mid-stream must take
+    the same abort path as a CRC mismatch: budget units settled, pooled
+    buffers returned, and the SAME manager saves and restores afterwards."""
+    import errno
+
+    from repro.core import faults
+
+    state = _state(scale=2)
+    with CheckpointManager(tmp_ckpt_dir, verify_crc=True,
+                           config=EngineConfig(backend="threadpool",
+                                               inflight_bytes=2 << 20)
+                           ) as mgr:
+        mgr.save(1, state)
+        plan = faults.FaultPlan([faults.Fault(
+            faults.OP_READ, at=2, action=faults.A_ERRNO, err=errno.EIO)])
+        with faults.inject(plan):
+            with pytest.raises(Exception) as ei:
+                mgr.restore(state_template=state, step=1)
+        assert plan.fired
+        chain, e = [], ei.value
+        while e is not None and e not in chain:
+            chain.append(e)
+            e = e.__cause__ or e.__context__
+        assert any(isinstance(x, faults.InjectedIOError) for x in chain)
+        assert mgr.engine.pool.outstanding_bytes == 0   # books settled
+        mgr.save(2, state)                              # no budget deadlock
+        r = mgr.restore(state_template=state, step=2)
+        np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                      np.asarray(state["params"]["w"]))
+
+
+def test_restore_abort_after_injected_crash_mid_stream(tmp_ckpt_dir):
+    """An InjectedCrash (worker death mid-pread) must also leave the engine
+    reusable — the stream's abort path cannot depend on the error type."""
+    from repro.core import faults
+
+    state = _state(scale=2)
+    with CheckpointManager(tmp_ckpt_dir, verify_crc=True,
+                           config=EngineConfig(backend="threadpool",
+                                               inflight_bytes=2 << 20)
+                           ) as mgr:
+        mgr.save(1, state)
+        plan = faults.FaultPlan([faults.Fault(faults.OP_READ, at=1,
+                                              action=faults.A_CRASH)])
+        with faults.inject(plan):
+            with pytest.raises(Exception):
+                mgr.restore(state_template=state, step=1)
+        assert plan.fired
+        assert mgr.engine.pool.outstanding_bytes == 0
+        r = mgr.restore(state_template=state, step=1)   # retry, clean run
+        np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                      np.asarray(state["params"]["w"]))
