@@ -5,11 +5,13 @@ PY ?= python
 
 # The ROADMAP tier-1 gate plus the chaos gate and the save-, restore-,
 # concurrency, and delta smoke benchmarks: regressions in the test suite,
-# crash/corruption invariants under injected faults, pipelined blocking
-# time, streaming restore (wall-clock, staging bound, bit-identity), the
+# crash/corruption invariants under injected faults (incl. crashes in the
+# fingerprint-diff -> D2H gather window), pipelined blocking time,
+# streaming restore (wall-clock, staging bound, bit-identity), the
 # multi-writer commit protocol (one committed dir, merged manifest,
 # elastic bit-identity), or delta checkpointing (1%-dirty save writes
-# <=10% of full bytes, bit-identical restore, refcount GC) fail loudly.
+# <=10% of full bytes, bit-identical restore, refcount GC, fp128==blake2b
+# dirty sets, d2h_bytes <= dirty bytes + digest tables) fail loudly.
 verify: test chaos bench-smoke bench-restore-smoke bench-concurrency-smoke \
 	bench-delta-smoke
 

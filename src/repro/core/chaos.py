@@ -53,7 +53,8 @@ from .manifest import MANIFEST_NAME, ManifestError
 from .multilevel import MultiLevelCheckpointer
 from .multiwriter import MultiWriterAborted, MultiWriterCheckpointer
 
-CELLS = ("solo", "delta", "ml", "ml-delta", "mw", "mw-delta")
+CELLS = ("solo", "delta", "ml", "ml-delta", "mw", "mw-delta",
+         "delta-gather")
 _CHUNK = 2048         # delta chunk grid for campaign states (small & fast)
 
 
@@ -267,6 +268,17 @@ def _pick_fault(rng: random.Random, for_restore: bool = False) -> faults.Fault:
                         err=_errno.ENOSPC)
 
 
+def _pick_gather_fault(rng: random.Random) -> faults.Fault:
+    """Fault in the dirty-chunk gather window between the fingerprint diff
+    and put submission (delta §14): a crash or I/O error mid-gather must
+    abort the stream so no manifest ever references never-copied chunks."""
+    at = rng.randint(1, 2)
+    if rng.random() < 0.5:
+        return faults.Fault(faults.OP_GATHER, at=at)
+    return faults.Fault(faults.OP_GATHER, at=at,
+                        action=faults.A_ERRNO, err=_errno.EIO)
+
+
 def _fault_kind(f: faults.Fault) -> str:
     return f"{f.action}-{f.op}"
 
@@ -318,6 +330,11 @@ def _trial_single(t: _Trial, stats: CampaignStats) -> None:
     base.delta_gc_grace_s = 0.0
 
     state = _make_state(rng)
+    if t.cell == "delta-gather":
+        # hold one tensor on device: exercises the on-device fingerprint +
+        # D2H dirty-span gather path instead of free host views
+        import jax.numpy as jnp
+        state["w"] = jnp.asarray(state["w"])
     step = rng.randint(1, 5)
     for _ in range(rng.randint(1, 2)):
         mgr.save(step, state)
@@ -326,9 +343,12 @@ def _trial_single(t: _Trial, stats: CampaignStats) -> None:
         state = _mutate(state, rng)
         step += rng.randint(1, 3)
 
-    scenario = rng.choice(["save", "save", "save", "resave", "restore",
-                           "corrupt", "corrupt"]
-                          + (["flush"] if ml else []))
+    if t.cell == "delta-gather":
+        scenario = rng.choice(["save", "save", "resave"])
+    else:
+        scenario = rng.choice(["save", "save", "save", "resave", "restore",
+                               "corrupt", "corrupt"]
+                              + (["flush"] if ml else []))
     if scenario == "resave":
         step = max(t.committed)        # overwrite: the displaced-aside window
     pending_fp = _fp(state)
@@ -338,7 +358,8 @@ def _trial_single(t: _Trial, stats: CampaignStats) -> None:
         _trial_corruption(t, stats)
         return
 
-    fault = _pick_fault(rng, for_restore=(scenario == "restore"))
+    fault = (_pick_gather_fault(rng) if t.cell == "delta-gather"
+             else _pick_fault(rng, for_restore=(scenario == "restore")))
     t.fault_desc = fault.describe()
     plan = faults.FaultPlan([fault])
     err: BaseException | None = None

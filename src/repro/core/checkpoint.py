@@ -202,8 +202,13 @@ class SaveMetrics:
     written_bytes: int = 0         # bytes submitted to storage (< total when
     #                                delta saves skip clean chunks, §12)
     extract_seconds: float = 0.0   # tensor extraction + lean serialization
-    hash_seconds: float = 0.0      # delta chunk hashing + diff (worker-side)
+    fingerprint_seconds: float = 0.0  # delta: digest every chunk (worker-side)
+    diff_seconds: float = 0.0      # delta: diff digests + build chunk refs
     d2h_seconds: float = 0.0       # device→host (staging copy when streaming)
+    d2h_bytes: int = 0             # delta fp128: device bytes that crossed —
+    #                                digest tables + dirty-chunk gathers only
+    #                                (0 for host-resident sources, whose
+    #                                "gathers" are free views)
     flush_seconds: float = 0.0     # engine write + fsync
     commit_seconds: float = 0.0
     blocking_seconds: float = 0.0  # time the training loop was stalled
@@ -212,6 +217,12 @@ class SaveMetrics:
     chunks_dirty: int = 0          # delta saves: chunks actually written
     mode: str = "blocking"         # blocking | pipelined | legacy[-async]
     #                                (delta saves get a "delta-" prefix)
+
+    @property
+    def hash_seconds(self) -> float:
+        """Back-compat: the PR-5 hash+diff wall, now split into
+        ``fingerprint_seconds`` + ``diff_seconds``."""
+        return self.fingerprint_seconds + self.diff_seconds
 
     @property
     def flush_gbps(self) -> float:
@@ -264,7 +275,8 @@ class CheckpointManager:
                  streaming: bool = True,
                  eager_snapshot: bool = False,
                  delta: bool = False,
-                 delta_chunk_bytes: int = delta_mod.DEFAULT_CHUNK_BYTES):
+                 delta_chunk_bytes: int = delta_mod.DEFAULT_CHUNK_BYTES,
+                 device_fingerprint: bool = True):
         """``keep``: retain the newest N committed steps (N >= 1); ``None``
         retains every step. ``keep=0`` is rejected — it used to silently
         mean "keep everything", which is what ``None`` now says out loud.
@@ -293,6 +305,14 @@ class CheckpointManager:
         residency tracks the dirty payload volume rather than the
         ``config.inflight_bytes`` staging bound (free for host-resident
         arrays, a real D2H copy per device array — same as a legacy save).
+
+        ``device_fingerprint`` (delta saves only): fingerprint chunks with
+        the on-device fp128 digest (Pallas kernel / jitted XLA pass /
+        bit-identical numpy fallback — DESIGN.md §14) and D2H-copy only
+        dirty chunks, instead of resolving every payload to the host and
+        blake2b-hashing it there. Steps written by the two settings key
+        the delta index with different digest kinds, so flipping the flag
+        mid-run degrades to one full write — never a wrong delta.
         """
         self.directory = os.path.abspath(directory)
         os.makedirs(self.directory, exist_ok=True)
@@ -318,6 +338,7 @@ class CheckpointManager:
         self.verify_crc = verify_crc
         self.delta = delta
         self.delta_chunk_bytes = delta_chunk_bytes
+        self.device_fingerprint = device_fingerprint
         # test hook: how long an unreferenced store file is spared by the
         # refcount GC (a publish may not have landed its manifest yet)
         self.delta_gc_grace_s = delta_mod.GC_GRACE_S
@@ -491,13 +512,15 @@ class CheckpointManager:
                 run_puts, plan = puts, None
                 totals = rank_totals
                 if self.delta:
-                    # chunk + hash + diff on the worker: zero blocking cost
-                    t1 = time.perf_counter()
+                    # fingerprint + diff on the worker: zero blocking cost
                     plan = delta_mod.plan_delta(
                         puts, self._load_delta_index(),
                         chunk_bytes=self.delta_chunk_bytes,
-                        checksum=self.config.checksum)
-                    metrics.hash_seconds = time.perf_counter() - t1
+                        checksum=self.config.checksum,
+                        device_fingerprint=self.device_fingerprint)
+                    metrics.fingerprint_seconds = plan.fingerprint_seconds
+                    metrics.diff_seconds = plan.diff_seconds
+                    metrics.d2h_bytes = plan.d2h_bytes
                     metrics.chunks_total = plan.chunks_total
                     metrics.chunks_dirty = plan.chunks_dirty
                     run_puts = plan.puts

@@ -44,9 +44,11 @@ from __future__ import annotations
 import hashlib
 import os
 import posixpath
+import threading
 import time
 import uuid
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 
 import numpy as np
@@ -54,8 +56,9 @@ import numpy as np
 from . import faults
 from .engines import SaveSpec
 from .engines.base import as_u8
-from .manifest import (CHUNK_KIND, ChunkRef, Manifest, ManifestError,
-                       MANIFEST_NAME, ShardEntry, _RANK_MANIFEST_RE)
+from .manifest import (CHUNK_KIND, DIGEST_BLAKE2B, DIGEST_FP128, ChunkRef,
+                       Manifest, ManifestError, MANIFEST_NAME, ShardEntry,
+                       _RANK_MANIFEST_RE)
 from .pipeline import PendingPut
 
 CHUNKSTORE_DIR = "chunkstore"
@@ -67,6 +70,25 @@ DEFAULT_CHUNK_BYTES = 256 << 10
 # store files younger than this are never reaped: they may belong to a
 # publish (or a cross-tier fetch) that has not landed its manifest yet
 GC_GRACE_S = 300.0
+
+# host-fallback fingerprint thread pool (DESIGN.md §14): per-put digest
+# jobs fan out across a few threads — the numpy uint32 matmul releases the
+# GIL, so multi-core hosts overlap the per-tensor passes instead of
+# serializing them on the one pipeline worker
+FP_POOL_WORKERS = min(4, os.cpu_count() or 1)
+_fp_pool: ThreadPoolExecutor | None = None
+_fp_pool_lock = threading.Lock()
+
+
+def _host_fp_pool() -> ThreadPoolExecutor:
+    global _fp_pool
+    if _fp_pool is None:
+        with _fp_pool_lock:
+            if _fp_pool is None:
+                _fp_pool = ThreadPoolExecutor(
+                    max_workers=FP_POOL_WORKERS,
+                    thread_name_prefix="fp128-host")
+    return _fp_pool
 
 
 def chunk_hash(mv) -> str:
@@ -124,13 +146,18 @@ class DeltaIndex:
     Keyed by (record_key, shard index window, payload nbytes): a shard whose
     tensor, window, or size changed gets no match and is fully dirty —
     which also makes resharding, chunk-size changes, and delta-over-non-delta
-    transitions trivially correct (everything rewrites once).
+    transitions trivially correct (everything rewrites once). Each entry
+    carries its manifest's digest kind; ``lookup`` only matches when the
+    caller diffs with the same kind, so a blake2b-keyed index under an
+    fp128 planner (or vice versa) degrades to a full write — content
+    addresses of different digest functions must never compare equal.
     Only references already resident in the chunkstore are indexed; a fresh
     save must never point at bytes inside a GC-able step directory.
     """
 
     def __init__(self):
-        self._by_shard: dict[tuple, tuple[ChunkRef, ...]] = {}
+        # key -> (digest kind, chunk refs)
+        self._by_shard: dict[tuple, tuple[str, tuple[ChunkRef, ...]]] = {}
 
     @staticmethod
     def from_manifest(manifest: Manifest | None) -> "DeltaIndex":
@@ -145,12 +172,17 @@ class DeltaIndex:
                            for r in sh.chunks):
                     continue
                 idx._by_shard.setdefault(
-                    (rec.key, tuple(sh.index), sh.nbytes), sh.chunks)
+                    (rec.key, tuple(sh.index), sh.nbytes),
+                    (sh.digest_kind, sh.chunks))
         return idx
 
-    def lookup(self, record_key: str, index, nbytes: int
+    def lookup(self, record_key: str, index, nbytes: int, *,
+               digest: str = DIGEST_BLAKE2B
                ) -> tuple[ChunkRef, ...] | None:
-        return self._by_shard.get((record_key, tuple(index or ()), nbytes))
+        e = self._by_shard.get((record_key, tuple(index or ()), nbytes))
+        if e is None or e[0] != digest:
+            return None
+        return e[1]
 
     def __len__(self) -> int:
         return len(self._by_shard)
@@ -170,7 +202,9 @@ class _ShardChunks:
 
 @dataclass
 class DeltaPlan:
-    """Output of the hash/diff pass: what to write, and how to describe it."""
+    """Output of the fingerprint/diff pass: what to write, how to describe
+    it, and where the planning time went (SaveMetrics feeds off the phase
+    timers and the D2H ledger)."""
     puts: list[PendingPut] = field(default_factory=list)
     shards: list[_ShardChunks] = field(default_factory=list)
     total_bytes: int = 0       # logical tensor + blob bytes of the state
@@ -178,33 +212,140 @@ class DeltaPlan:
     blob_bytes: int = 0        # lean-object bytes (always written)
     chunks_total: int = 0
     chunks_dirty: int = 0
+    digest_kind: str = DIGEST_BLAKE2B
+    fingerprint_seconds: float = 0.0   # phase A: digest every chunk
+    diff_seconds: float = 0.0          # phase B: diff + build refs
+    d2h_bytes: int = 0         # device bytes that (will) cross to the host
 
     @property
     def written_bytes(self) -> int:
         return self.dirty_bytes + self.blob_bytes
 
 
+def quant_write_spans(packed_nbytes: int, chunk_bytes: int,
+                      header_bytes: int):
+    """Write spans for a quant-packed payload under fp128 digests.
+
+    The fp128 digest domain is ``packed[header_bytes:]`` (the q rows + f32
+    scales stream) on the plain ``chunk_spans`` grid: the 20-byte header is
+    a pure function of the element count, which is already part of the
+    delta index key, so fingerprinting it would only re-dirty chunk 0 of
+    every save. The WRITE spans merge the header into the first chunk so
+    the refs still concatenate back to the exact packed payload:
+    span_0 = packed[0 : header+c], span_j = packed[header + j*c :][:n].
+    """
+    first = True
+    for pos, n in chunk_spans(packed_nbytes - header_bytes, chunk_bytes):
+        if first:
+            yield 0, n + header_bytes
+            first = False
+        else:
+            yield pos + header_bytes, n
+
+
+@dataclass
+class _FpJob:
+    """Phase-A fingerprint result for one tensor put (fp128 planner)."""
+    kind: str                     # "host" | "device" | "qhost" | "qdevice"
+    spans: list                   # write spans [(pos, n)] in payload order
+    digests: np.ndarray | None = None   # (n_chunks, 4) uint32
+    future: object = None               # pending host digest job
+    payload: np.ndarray | None = None   # host payload (host / qhost)
+    flat: object = None                 # device 1-D array (device)
+    header: bytes = b""                 # packed header (qdevice)
+    qflat: object = None                # device int8 q stream (qdevice)
+    scales: object = None               # device f32 scales (qdevice)
+
+
+def _gather_host(ck: str, chunk: np.ndarray) -> np.ndarray:
+    faults.gather(ck)
+    return chunk
+
+
+def _gather_device(ck: str, flat, pos: int, n: int, isz: int) -> np.ndarray:
+    """D2H-copy one dirty span of a device array (the only payload bytes
+    of a clean-mostly tensor that ever cross the link)."""
+    faults.gather(ck)
+    sl = flat[pos // isz:(pos + n) // isz]
+    return np.asarray(sl).view(np.uint8)
+
+
+def _gather_quant_device(ck: str, job: _FpJob, pos: int, n: int
+                         ) -> np.ndarray:
+    """Assemble one dirty span of a quant-packed payload from its device
+    pieces (header is host bytes; q / scales slices are gathered D2H).
+    All q/s boundaries here are 4-aligned: chunk boundaries are multiples
+    of ``chunk_bytes`` (itself a multiple of 4) in the qs-stream, and the
+    q-region size is rows*GROUP_COLS."""
+    faults.gather(ck)
+    out = np.empty(n, np.uint8)
+    hb = len(job.header)
+    filled = 0
+    if pos < hb:                                  # chunk 0 carries the header
+        k = min(hb - pos, n)
+        out[:k] = np.frombuffer(job.header, np.uint8)[pos:pos + k]
+        filled = k
+    a = pos + filled - hb                         # qs-stream byte range
+    b = pos + n - hb
+    qb = int(job.qflat.shape[0])
+    if a < qb and b > a:
+        k = min(qb, b) - a
+        out[filled:filled + k] = np.asarray(job.qflat[a:a + k]) \
+            .view(np.uint8)
+        filled += k
+        a += k
+    if b > qb:
+        out[filled:] = np.asarray(
+            job.scales[(a - qb) // 4:(b - qb) // 4]).view(np.uint8)
+    return out
+
+
+def _device_digestable(src, chunk_bytes: int) -> bool:
+    """Can this put's bytes be fingerprinted where they live?
+
+    Needs a jax.Array whose element size divides the lane width (1/2/4 —
+    f64 state falls back to the host pass) and a lane-aligned chunk grid so
+    per-chunk digest domains tile the global lane stream."""
+    import jax
+    if not isinstance(src, jax.Array):
+        return False
+    dt = np.dtype(src.dtype)
+    return (chunk_bytes % 4 == 0 and dt.itemsize in (1, 2, 4)
+            and dt.kind not in "bO")
+
+
 def plan_delta(puts: list[PendingPut], index: DeltaIndex, *,
                chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-               checksum: bool = True) -> DeltaPlan:
-    """Resolve, chunk, hash, and diff every declared put.
+               checksum: bool = True,
+               device_fingerprint: bool = False) -> DeltaPlan:
+    """Fingerprint, diff, and re-declare every put as its dirty chunks.
 
     Runs on the pipeline worker (async saves pay zero blocking time for the
-    hash pass). Blob puts (the lean object) pass through unchanged; tensor
+    digest pass). Blob puts (the lean object) pass through unchanged; tensor
     puts are replaced by one put per DIRTY chunk — a clean chunk becomes a
-    reference to the previous step's store extent. Chunk hashing touches
-    every payload byte, which is exactly the D2H snapshot the full save
-    would have done anyway; what it buys is not writing the clean ones.
+    reference to the previous step's store extent.
 
-    Memory: dirty-chunk puts hold VIEWS of the resolved payload, so host
-    residency during the flush is the payloads of tensors with >= 1 dirty
-    chunk (clean-only tensors are dropped as the loop advances). For host
-    arrays those views are free (they alias the caller's state); only
-    device-array D2H copies and quant-packed buffers are real allocations
-    — copying dirty chunks instead would shrink the sparse case but add a
-    full extra copy at high dirty fractions, so views win on balance.
+    ``device_fingerprint=False`` is the PR-5 path: resolve every payload to
+    host bytes and blake2b-hash each chunk — every byte crosses the link
+    just to be diffed. ``device_fingerprint=True`` computes fp128 digests
+    where the bytes live (Pallas kernel on TPU, one jitted uint32 matmul
+    otherwise, the vectorized numpy fallback for host arrays, all
+    bit-identical — kernels/fingerprint.py) and D2H-copies only the chunks
+    the diff proves dirty, so clean bytes never cross PCIe; quantized puts
+    run the fused quantize+fingerprint pass and gather dirty spans of the
+    packed stream. The two paths key the delta index with their own digest
+    kind, so flipping the flag (or restoring onto an old blake2b index)
+    degrades to one full write — never a wrong delta.
+
+    Memory: dirty-chunk puts hold VIEWS of resolved host payloads (free for
+    host arrays — they alias the caller's state) or deferred D2H gathers
+    for device arrays, which the pipeline worker materializes one chunk at
+    a time in staging order.
     """
+    if device_fingerprint:
+        return _plan_delta_fp128(puts, index, chunk_bytes=chunk_bytes)
     plan = DeltaPlan()
+    t0 = time.perf_counter()
     for p in puts:
         if p.spec.is_blob:
             plan.puts.append(p)
@@ -218,7 +359,8 @@ def plan_delta(puts: list[PendingPut], index: DeltaIndex, *,
                 f"resolved {payload.nbytes}")
         plan.total_bytes += payload.nbytes
         rkey = p.spec.record_key or p.spec.key
-        prior = index.lookup(rkey, p.spec.index, p.spec.nbytes)
+        prior = index.lookup(rkey, p.spec.index, p.spec.nbytes,
+                             digest=DIGEST_BLAKE2B)
         crc = 0 if checksum else None
         refs: list = []
         for j, (pos, n) in enumerate(chunk_spans(p.spec.nbytes, chunk_bytes)):
@@ -234,12 +376,144 @@ def plan_delta(puts: list[PendingPut], index: DeltaIndex, *,
             ck = f"{p.spec.key}.c{j:05d}"
             plan.puts.append(PendingPut(
                 SaveSpec(ck, n, "uint8", (n,), ((0, n),), record_key=ck),
-                (lambda c=chunk: c)))
+                (lambda c=chunk, k=ck: _gather_host(k, c))))
             refs.append((ck, h))                      # dirty: write
             plan.chunks_dirty += 1
             plan.dirty_bytes += n
         plan.shards.append(_ShardChunks(p.spec, refs, crc))
+    plan.fingerprint_seconds = time.perf_counter() - t0
     return plan
+
+
+def _plan_delta_fp128(puts: list[PendingPut], index: DeltaIndex, *,
+                      chunk_bytes: int) -> DeltaPlan:
+    """The device-fingerprint planner (DESIGN.md §14).
+
+    Phase A fingerprints every put where its bytes live — device digests
+    via kernels.fingerprint (16 B/chunk crossing D2H), host fallbacks
+    fanned across the fp128 thread pool. Phase B diffs the digest tables
+    against the previous index and declares one put per dirty chunk whose
+    resolve D2H-gathers exactly that span.
+
+    fp128 shard entries carry NO whole-payload CRC: per-chunk CRCs (fresh
+    from the write stream for dirty chunks, inherited with the store ref
+    for clean ones) already cover every payload byte, and the whole-payload
+    pass would re-read on the host the very bytes this path exists to keep
+    off it.
+    """
+    from ..kernels import fingerprint as fpk
+    from . import quant_codec
+    plan = DeltaPlan(digest_kind=DIGEST_FP128)
+    hb = quant_codec.HEADER.size
+    t0 = time.perf_counter()
+    jobs: list[_FpJob | None] = []
+    pool = _host_fp_pool()
+    for p in puts:
+        if p.spec.is_blob:
+            jobs.append(None)
+            continue
+        if p.quant and _device_digestable(p.source, chunk_bytes) \
+                and np.dtype(p.source.dtype).kind == "f":
+            import jax.numpy as jnp
+            src = p.source
+            n_elems = int(np.prod(src.shape, dtype=np.int64))
+            rows = quant_codec.packed_rows(n_elems)
+            flat = jnp.ravel(src).astype(jnp.float32)
+            padded = jnp.pad(
+                flat, (0, rows * quant_codec.GROUP_COLS - n_elems)) \
+                .reshape(rows, quant_codec.GROUP_COLS)
+            q, s, dig = fpk.quant_fingerprint(padded, chunk_bytes)
+            header = quant_codec.HEADER.pack(
+                quant_codec.MAGIC, n_elems * 4, rows, quant_codec.GROUP_COLS)
+            assert hb + rows * quant_codec.GROUP_COLS + rows * 4 \
+                == p.spec.nbytes
+            jobs.append(_FpJob(
+                "qdevice", list(quant_write_spans(p.spec.nbytes, chunk_bytes,
+                                                  hb)),
+                digests=dig, header=header, qflat=q.reshape(-1), scales=s))
+            plan.d2h_bytes += dig.nbytes
+        elif p.quant:
+            payload = np.frombuffer(as_u8(p.resolve()), np.uint8)
+            _check_resolved(p, payload)
+            jobs.append(_FpJob(
+                "qhost", list(quant_write_spans(p.spec.nbytes, chunk_bytes,
+                                                hb)),
+                future=pool.submit(fpk.fingerprint_chunks_host,
+                                   payload[hb:], chunk_bytes),
+                payload=payload))
+        elif _device_digestable(p.source, chunk_bytes) and p.spec.nbytes:
+            flat = p.source.reshape(-1)
+            dig = fpk.fingerprint_digests(flat, chunk_bytes)
+            jobs.append(_FpJob(
+                "device", list(chunk_spans(p.spec.nbytes, chunk_bytes)),
+                digests=dig, flat=flat))
+            plan.d2h_bytes += dig.nbytes
+        else:
+            payload = np.frombuffer(as_u8(p.resolve()), np.uint8)
+            _check_resolved(p, payload)
+            jobs.append(_FpJob(
+                "host", list(chunk_spans(p.spec.nbytes, chunk_bytes)),
+                future=pool.submit(fpk.fingerprint_chunks_host,
+                                   payload, chunk_bytes),
+                payload=payload))
+    for job in jobs:
+        if job is not None and job.future is not None:
+            job.digests = job.future.result()
+            job.future = None
+    plan.fingerprint_seconds = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    for p, job in zip(puts, jobs):
+        if job is None:                               # blob passthrough
+            plan.puts.append(p)
+            plan.blob_bytes += p.spec.nbytes
+            plan.total_bytes += p.spec.nbytes
+            continue
+        plan.total_bytes += p.spec.nbytes
+        rkey = p.spec.record_key or p.spec.key
+        prior = index.lookup(rkey, p.spec.index, p.spec.nbytes,
+                             digest=DIGEST_FP128)
+        hexes = fpk.digests_hex(job.digests)
+        assert len(hexes) == len(job.spans), (p.spec.key, len(hexes),
+                                              len(job.spans))
+        isz = (np.dtype(p.source.dtype).itemsize
+               if job.kind == "device" else 1)
+        refs: list = []
+        for j, (pos, n) in enumerate(job.spans):
+            h = hexes[j]
+            plan.chunks_total += 1
+            pr = prior[j] if prior is not None and j < len(prior) else None
+            if pr is not None and pr.hash == h and pr.nbytes == n:
+                refs.append(pr)                       # clean: reference
+                continue
+            ck = f"{p.spec.key}.c{j:05d}"
+            if job.kind == "device":
+                resolve = (lambda k=ck, f=job.flat, o=pos, m=n, z=isz:
+                           _gather_device(k, f, o, m, z))
+                plan.d2h_bytes += n
+            elif job.kind == "qdevice":
+                resolve = (lambda k=ck, jb=job, o=pos, m=n:
+                           _gather_quant_device(k, jb, o, m))
+                plan.d2h_bytes += n
+            else:
+                chunk = job.payload[pos:pos + n]
+                resolve = lambda k=ck, c=chunk: _gather_host(k, c)
+            plan.puts.append(PendingPut(
+                SaveSpec(ck, n, "uint8", (n,), ((0, n),), record_key=ck),
+                resolve))
+            refs.append((ck, h))                      # dirty: write
+            plan.chunks_dirty += 1
+            plan.dirty_bytes += n
+        plan.shards.append(_ShardChunks(p.spec, refs, None))
+    plan.diff_seconds = time.perf_counter() - t1
+    return plan
+
+
+def _check_resolved(p: PendingPut, payload: np.ndarray) -> None:
+    if payload.nbytes != p.spec.nbytes:
+        raise ValueError(
+            f"declared {p.spec.nbytes} bytes for {p.spec.key!r}, "
+            f"resolved {payload.nbytes}")
 
 
 def apply_plan(stream_manifest: Manifest, plan: DeltaPlan) -> Manifest:
@@ -275,7 +549,10 @@ def apply_plan(stream_manifest: Manifest, plan: DeltaPlan) -> Manifest:
             spec.record_key or spec.key, spec.dtype or "uint8", gshape,
             ShardEntry(tuple(index), f"<chunks:{uuid.uuid4().hex[:12]}>", 0,
                        spec.nbytes, sc.payload_crc, CHUNK_KIND,
-                       tuple(chunks)))
+                       tuple(chunks),
+                       digest=(plan.digest_kind
+                               if plan.digest_kind != DIGEST_BLAKE2B
+                               else None)))
     return out
 
 

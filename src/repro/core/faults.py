@@ -51,7 +51,11 @@ OP_READ = "read"
 OP_FSYNC = "fsync"
 OP_RENAME = "rename"
 OP_FALLOCATE = "fallocate"
-OP_KINDS = (OP_WRITE, OP_READ, OP_FSYNC, OP_RENAME, OP_FALLOCATE)
+# not a syscall: the D2H gather of one dirty chunk between the
+# fingerprint-diff and its put submission (DESIGN.md §14) — the window in
+# which a crash must not commit a manifest referencing never-copied chunks
+OP_GATHER = "gather"
+OP_KINDS = (OP_WRITE, OP_READ, OP_FSYNC, OP_RENAME, OP_FALLOCATE, OP_GATHER)
 
 # fault actions
 A_CRASH = "crash"    # simulate process death at the syscall
@@ -272,6 +276,24 @@ def posix_fallocate(fd: int, offset: int, length: int) -> None:
     # RuntimeError and propagates
 
 
+def gather(key: str) -> None:
+    """Dirty-chunk D2H gather shim (delta fp128 path, DESIGN.md §14).
+
+    Consulted once per dirty-chunk resolve, carrying the chunk's put key as
+    the path so schedules can target specific chunks. Runs on the pipeline
+    worker between the fingerprint diff and the chunk's ``stream.put`` —
+    a crash here unwinds through the stream abort, so the step commits
+    nothing (the manifest that would have referenced the never-copied
+    chunk is never written)."""
+    f = _ACTIVE._consult(OP_GATHER, path=key) if _ACTIVE is not None else None
+    if f is None:
+        return
+    if f.action == A_CALL:
+        f.callback()
+        return
+    _raise_for(f, OP_GATHER)   # crash / errno / torn / short all abort
+
+
 def file_write(f, data: bytes) -> None:
     """Buffered-file write shim (the manifest tmp-file path)."""
     flt = _ACTIVE._consult(OP_WRITE) if _ACTIVE is not None else None
@@ -348,11 +370,20 @@ def simulate_owner_death(root: str, *, backdate_s: float = 3600.0) -> int:
 
 
 def referenced_chunks(root: str) -> dict[str, list]:
-    """Map store-relative path -> [(offset, nbytes, crc32, hash, key), ...]
-    for every store-resident reference in committed step manifests."""
+    """Map store-relative path ->
+    [(offset, nbytes, crc32, hash, digest_kind, key), ...] for every
+    store-resident reference in committed step manifests.
+
+    ``digest_kind`` names the hash's digest function (manifest constants;
+    None for extent/blob refs that carry no content address) so the
+    scrubber verifies each span with the function that produced it. The
+    FIRST chunk of a quantized fp128 shard gets hash=None: its write span
+    includes the 20-byte packed header, which the fp128 digest domain
+    excludes, so its content cannot be checked against the digest directly
+    (CRC, when recorded, still covers it)."""
     from .checkpoint import _STEP_RE          # runtime: avoid cycle
     from .delta import STORE_PREFIX, is_chunked, store_rel
-    from .manifest import Manifest
+    from .manifest import DIGEST_FP128, Manifest
     refs: dict[str, list] = {}
     try:
         names = sorted(os.listdir(root))
@@ -365,22 +396,28 @@ def referenced_chunks(root: str) -> dict[str, list]:
             m = Manifest.load(os.path.join(root, name))
         except ManifestError:
             continue
+        quantized = set(m.extra.get("quantized", ()))
         for rec in m.tensors.values():
             for sh in rec.shards:
                 if is_chunked(sh) and sh.chunks:
-                    for r in sh.chunks:
+                    kind = sh.digest_kind
+                    headered = (kind == DIGEST_FP128
+                                and rec.key in quantized)
+                    for j, r in enumerate(sh.chunks):
                         if r.path.startswith(STORE_PREFIX):
+                            h = None if (headered and j == 0) else r.hash
                             refs.setdefault(store_rel(r.path), []).append(
-                                (r.offset, r.nbytes, r.crc32, r.hash,
+                                (r.offset, r.nbytes, r.crc32, h, kind,
                                  rec.key))
                 elif sh.path.startswith(STORE_PREFIX):
                     refs.setdefault(store_rel(sh.path), []).append(
-                        (sh.offset, sh.nbytes, sh.crc32, None, rec.key))
+                        (sh.offset, sh.nbytes, sh.crc32, None, None,
+                         rec.key))
         for key, b in m.blobs.items():
             if b.path.startswith(STORE_PREFIX):
                 refs.setdefault(store_rel(b.path), []).append(
                     (b.offset, b.nbytes, getattr(b, "crc32", None), None,
-                     key))
+                     None, key))
     return refs
 
 
@@ -395,7 +432,7 @@ def corrupt_store_chunk(root: str, rng) -> tuple[str, int] | None:
     if not candidates:
         return None
     rel, spans = candidates[rng.randrange(len(candidates))]
-    off, nbytes, _crc, _h, _key = spans[rng.randrange(len(spans))]
+    off, nbytes, _crc, _h, _kind, _key = spans[rng.randrange(len(spans))]
     flip_at = off + rng.randrange(max(nbytes, 1))
     flip_byte(os.path.join(root, CHUNKSTORE_DIR, rel), flip_at)
     return rel, flip_at
@@ -424,12 +461,16 @@ class ScrubReport:
 
 def _verify_spans(path: str, spans) -> tuple[int, bool]:
     """(spans checked, all good). A span verifies by CRC when recorded,
-    else by blake2b content hash, else by being readable at its extent."""
+    else by recomputing its content hash with the digest kind that
+    produced it (blake2b or fp128 — fp128 chunk digests cover exactly the
+    written span, quantized first-chunks excepted, see
+    ``referenced_chunks``), else by being readable at its extent."""
     import hashlib
+    from .manifest import DIGEST_FP128
     checked = 0
     try:
         with open(path, "rb") as f:
-            for off, nbytes, crc, h, _key in spans:
+            for off, nbytes, crc, h, kind, _key in spans:
                 f.seek(off)
                 data = f.read(nbytes)
                 checked += 1
@@ -439,7 +480,11 @@ def _verify_spans(path: str, spans) -> tuple[int, bool]:
                     if zlib.crc32(data) & 0xFFFFFFFF != crc:
                         return checked, False
                 elif h is not None:
-                    if hashlib.blake2b(
+                    if kind == DIGEST_FP128:
+                        from ..kernels.fingerprint import digest_bytes
+                        if digest_bytes(data) != h:
+                            return checked, False
+                    elif hashlib.blake2b(
                             data, digest_size=16).hexdigest() != h:
                         return checked, False
     except OSError:

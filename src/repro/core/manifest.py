@@ -20,11 +20,17 @@ import zlib
 from dataclasses import dataclass, field, asdict
 
 MANIFEST_NAME = "manifest.json"
-# Ceiling this reader accepts / writes. Version 3 adds the chunk-reference
-# shard entry kind (content-addressed delta checkpoints, DESIGN.md §12); a
-# manifest without chunk entries is still written at BASE_FORMAT_VERSION so
-# pre-delta readers keep loading non-delta checkpoints.
-FORMAT_VERSION = 3
+# Ceiling this reader accepts / writes. Version 3 added the chunk-reference
+# shard entry kind (content-addressed delta checkpoints, DESIGN.md §12);
+# version 4 adds per-shard chunk digest *kinds* (on-device fp128
+# fingerprints, DESIGN.md §14). The written version floats with content —
+# a manifest without chunk entries stays at BASE_FORMAT_VERSION, blake2b
+# chunk manifests at CHUNK_FORMAT_VERSION — so older readers keep loading
+# everything they can actually interpret and refuse (loudly) what they
+# can't: a v3 reader must never scrub/diff fp128 refs as if they were
+# blake2b content addresses.
+FORMAT_VERSION = 4
+CHUNK_FORMAT_VERSION = 3
 BASE_FORMAT_VERSION = 2
 
 # shard entry kinds: "extent" = bytes at (path, offset); "chunks" = the
@@ -34,6 +40,12 @@ BASE_FORMAT_VERSION = 2
 EXTENT_KIND = "extent"
 CHUNK_KIND = "chunks"
 _SHARD_KINDS = (EXTENT_KIND, CHUNK_KIND)
+
+# chunk digest kinds: which function produced ``ChunkRef.hash``. Content
+# addresses of different kinds never compare equal — the delta planner
+# treats a kind mismatch exactly like a chunk-grid change (full write).
+DIGEST_BLAKE2B = "blake2b128"   # host blake2b-128 (PR 5, implicit default)
+DIGEST_FP128 = "fp128"          # on-device multilinear digest (DESIGN.md §14)
 
 _RANK_MANIFEST_RE = re.compile(r"^MANIFEST\.rank-(\d+)$")
 
@@ -86,7 +98,11 @@ class ShardEntry:
     ``kind == CHUNK_KIND``: the payload is the in-order concatenation of
     ``chunks`` (content-addressed delta entries, DESIGN.md §12); ``path`` is
     then a synthetic unique identifier (never opened), ``offset`` is 0, and
-    ``crc32`` covers the whole reassembled payload.
+    ``crc32`` — when present — covers the whole reassembled payload (fp128
+    shards omit it: per-chunk CRCs already cover every byte, and skipping
+    the extra host pass is half the point of device fingerprints).
+    ``digest`` names the digest kind of the ``ChunkRef.hash`` values
+    (``None`` means DIGEST_BLAKE2B, the pre-v4 implicit default).
     """
     index: tuple[tuple[int, int], ...]  # (start, stop) per dim, global coords
     path: str                           # file path relative to ckpt dir
@@ -95,6 +111,11 @@ class ShardEntry:
     crc32: int | None = None
     kind: str = EXTENT_KIND
     chunks: tuple[ChunkRef, ...] | None = None
+    digest: str | None = None
+
+    @property
+    def digest_kind(self) -> str:
+        return self.digest or DIGEST_BLAKE2B
 
     def to_json(self):
         d = {"index": [list(p) for p in self.index], "path": self.path,
@@ -102,6 +123,8 @@ class ShardEntry:
         if self.kind != EXTENT_KIND:
             d["kind"] = self.kind
             d["chunks"] = [c.to_json() for c in (self.chunks or ())]
+            if self.digest is not None and self.digest != DIGEST_BLAKE2B:
+                d["digest"] = self.digest
         return d
 
     @staticmethod
@@ -116,7 +139,7 @@ class ShardEntry:
             chunks = tuple(ChunkRef.from_json(c) for c in d.get("chunks", ()))
         return ShardEntry(tuple(tuple(p) for p in d["index"]), d["path"],
                           d["offset"], d["nbytes"], d.get("crc32"),
-                          kind, chunks)
+                          kind, chunks, d.get("digest"))
 
 
 @dataclass
@@ -238,10 +261,14 @@ class Manifest:
     # ---- (de)serialization ------------------------------------------------
     def to_json(self) -> dict:
         # version floats with content: chunk-reference entries need the v3
-        # reader, everything else stays loadable by pre-delta readers
+        # reader, non-blake2b digest kinds the v4 reader; everything else
+        # stays loadable by pre-delta readers
         fv = self.format_version
-        if any(sh.kind != EXTENT_KIND
-               for rec in self.tensors.values() for sh in rec.shards):
+        shards = [sh for rec in self.tensors.values() for sh in rec.shards]
+        if any(sh.kind != EXTENT_KIND for sh in shards):
+            fv = max(fv, CHUNK_FORMAT_VERSION)
+        if any(sh.kind == CHUNK_KIND and sh.digest_kind != DIGEST_BLAKE2B
+               for sh in shards):
             fv = max(fv, FORMAT_VERSION)
         return {"format_version": fv, "step": self.step,
                 "num_ranks": self.num_ranks, "strategy": self.strategy,

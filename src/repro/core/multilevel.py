@@ -18,6 +18,11 @@ finish wins — bounding the tail without failing the flush. Passing a
 Restore prefers level 0; a step only at level 1 is restored through
 ``RestorePrefetcher``, which pulls the planned extents into level 0 ahead of
 tensor materialization and commits the step locally when fully covered.
+
+``delta=True`` flushes only the store chunks a step actually references
+(never re-flushing residents); the fp128 digest kind (DESIGN.md §14)
+rides inside the manifest's chunk entries, so level-1 mirrors verify and
+repair with the same digest the scrubber uses locally.
 """
 
 from __future__ import annotations

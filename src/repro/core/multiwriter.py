@@ -26,6 +26,11 @@ Failure semantics: a rank failing before a barrier aborts the group — peers
 unblock with ``MultiWriterAborted`` instead of hanging — and the step is
 never published (the shared ``.tmp-*`` dir is owned by this process, so a
 later manager's GC leaves it alone until the owner dies).
+
+``delta=True`` composes per rank: each rank diffs its own shard windows
+with the fp128 device fingerprint (DESIGN.md §14) against the prior
+merged manifest's kind-matched index, so rank manifests carry the
+digest-kind tag and the rank-0 merge preserves it into the v4 manifest.
 """
 
 from __future__ import annotations

@@ -57,9 +57,19 @@ from .serialization import (LEAN_KEY, LocalShard, as_bytes_view,
 
 @dataclass
 class PendingPut:
-    """One declared object plus the deferred materialization of its bytes."""
+    """One declared object plus the deferred materialization of its bytes.
+
+    ``source`` keeps the (immutable) origin array alongside the resolve
+    closure so delta planning can fingerprint the bytes where they live —
+    on device for ``jax.Array`` sources — instead of forcing the full D2H
+    materialization that ``resolve()`` implies (DESIGN.md §14). ``quant``
+    marks puts whose resolved payload is the int8 quant-packed stream
+    (``spec.nbytes`` is the packed size, not the source's).
+    """
     spec: SaveSpec
     resolve: Callable[[], object]   # -> buffer-protocol of spec.nbytes bytes
+    source: object = None           # origin array (None: opaque/blob put)
+    quant: bool = False
 
 
 def iter_host_shards(t):
@@ -119,7 +129,8 @@ def build_save_puts(tensors: dict, lean_blob: bytes, *,
                 resolve = lambda a=arr: as_bytes_view(to_numpy_view(a))
             puts.append(PendingPut(
                 SaveSpec(f"{key}#{n}", nbytes, str(arr.dtype),
-                         tuple(t.shape), index, record_key=key), resolve))
+                         tuple(t.shape), index, record_key=key), resolve,
+                source=arr, quant=quant))
     puts.append(PendingPut(SaveSpec(LEAN_KEY, len(lean_blob), is_blob=True),
                            lambda: lean_blob))
     return puts, quantized

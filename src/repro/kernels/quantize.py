@@ -23,16 +23,27 @@ ROW_BLK = 8
 LANE_COLS = 512     # 4 × 128 lanes per row-group
 
 
-def _quant_kernel(x_ref, q_ref, s_ref):
-    x = x_ref[...].astype(jnp.float32)                   # (ROW_BLK, LANE_COLS)
-    absmax = jnp.max(jnp.abs(x), axis=1)                 # (ROW_BLK,)
+def quant_rows(x):
+    """Shared per-row quantize math: (rows, C) -> (int8 q, f32 scales).
+
+    Row-independent, so any tiling of the row axis gives identical bits —
+    the quantize kernel, the fused quantize+fingerprint kernel
+    (kernels/fingerprint.py) and the jnp oracle all call this.
+    """
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1)
     # multiply by the f32 reciprocal (not a / 127.0): XLA strength-reduces
     # constant divides to reciprocal multiplies, so spelling it out keeps
     # compiled and eager (oracle) paths bit-identical at round-half points
     scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / 127.0), 1.0)
     q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
-    q_ref[...] = q.astype(jnp.int8)
-    s_ref[...] = scale.astype(jnp.float32)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    q, s = quant_rows(x_ref[...])                        # (ROW_BLK, LANE_COLS)
+    q_ref[...] = q
+    s_ref[...] = s
 
 
 def _dequant_kernel(q_ref, s_ref, o_ref, *, out_dtype):

@@ -21,6 +21,34 @@ def dequantize_blocks_ref(q, scales, out_dtype=jnp.bfloat16):
             ).astype(out_dtype)
 
 
+def fingerprint_chunks_ref(lanes, lengths):
+    """Oracle for kernels.fingerprint.fingerprint_chunks.
+
+    lanes: (n_chunks, CL) uint32; lengths: (n_chunks, 1) uint32 byte
+    lengths of each chunk's digest domain -> (n_chunks, 4) uint32. One
+    dot_general instead of the kernel's per-chunk multiply-sum — exact
+    mod-2^32 arithmetic makes the association order irrelevant.
+    """
+    from .fingerprint import _LEN, _weights_jnp
+    d = jax.lax.dot_general(lanes.astype(jnp.uint32),
+                            _weights_jnp(lanes.shape[1]),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.uint32)
+    return d + (lengths.reshape(-1, 1).astype(jnp.uint32)
+                * jnp.asarray(_LEN, jnp.uint32))
+
+
+def quantize_fingerprint_blocks_ref(x, chunk_bytes):
+    """Oracle for kernels.fingerprint.quantize_fingerprint_blocks:
+    quantize (R, LANE_COLS) rows and digest the int8 q-stream on the
+    ``chunk_bytes`` grid. Returns (q, scales, digests)."""
+    from .fingerprint import _digest_lane_stream, lanes_u32
+    q, s = quantize_blocks_ref(x)
+    nbytes = q.shape[0] * q.shape[1]
+    d = _digest_lane_stream(lanes_u32(q.reshape(-1)), nbytes, chunk_bytes)
+    return q, s, d
+
+
 def rglru_scan_ref(a, b):
     """First-order linear recurrence h_t = a_t * h_{t-1} + b_t, h_0 = 0.
 

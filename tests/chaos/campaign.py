@@ -17,8 +17,10 @@ from repro.core import chaos
 
 GATE_SEEDS = (0, 42)
 MIN_FAULTS = 200
-# every kind class must appear across the gate run (prefixes of by_kind)
-REQUIRED_KINDS = ("crash:", "torn:", "short:", "errno:", "corrupt:")
+# every kind class must appear across the gate run (prefixes of by_kind);
+# crash:gather = a crash in the fingerprint-diff -> put D2H gather window
+REQUIRED_KINDS = ("crash:", "torn:", "short:", "errno:", "corrupt:",
+                  "crash:gather", "errno:gather")
 
 
 def main() -> int:

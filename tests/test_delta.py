@@ -79,14 +79,15 @@ def test_delta_manifest_entries_reference_store(tmp_ckpt_dir, rng):
                            delta_chunk_bytes=CHUNK) as mgr:
         mgr.save(0, state)
         man = Manifest.load(os.path.join(tmp_ckpt_dir, "step_00000000"))
-        assert man.format_version == 3
+        assert man.format_version == 4      # fp128 digest kind needs v4
         (rec,) = [r for k, r in man.tensors.items()]
         for sh in rec.shards:
             assert sh.kind == CHUNK_KIND
+            assert sh.digest_kind == "fp128"
             assert sh.chunks and sum(r.nbytes for r in sh.chunks) == sh.nbytes
             for r in sh.chunks:
                 assert r.path.startswith(delta_mod.STORE_PREFIX)
-                assert len(r.hash) == 32    # blake2b-128 hex
+                assert len(r.hash) == 32    # fp128 hex, blake2b-128 width
         # step dir holds only metadata; payload lives in the store
         files = os.listdir(os.path.join(tmp_ckpt_dir, "step_00000000"))
         assert files == ["manifest.json"]

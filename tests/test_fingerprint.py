@@ -1,0 +1,314 @@
+"""Property + compat tests for the fp128 chunk fingerprint (DESIGN.md §14).
+
+The load-bearing claim is *bit-identity across implementations*: the
+Pallas kernel (run in interpret mode here — no TPU in CI), the jitted
+XLA oracle, and the numpy host fallback must produce the same digest for
+the same bytes, so the delta planner's dirty set never depends on WHERE
+the fingerprint ran. Plus the digest-kind compat contract: flipping the
+digest engine between saves degrades to a full write — never a wrong
+delta — and blake2b manifests stay readable by pre-fp128 readers.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import CheckpointManager, EngineConfig
+from repro.core import delta as delta_mod
+from repro.core.manifest import (DIGEST_BLAKE2B, DIGEST_FP128,
+                                 FORMAT_VERSION, Manifest)
+from repro.kernels import fingerprint as fpk
+
+DTYPES = ("float32", "int16", "uint8", "int8")
+
+
+def _cfg():
+    return EngineConfig(backend="posix", strategy="single_file",
+                        direct=False)
+
+
+def _payload(nbytes: int, seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.int64).astype(np.uint8)
+
+
+def _all_impl_hexes(arr: np.ndarray, chunk_bytes: int) -> dict:
+    """Digest the same byte image through every implementation."""
+    flat = jnp.asarray(arr)
+    host = fpk.digests_hex(
+        fpk.fingerprint_chunks_host(arr.reshape(-1).view(np.uint8),
+                                    chunk_bytes))
+    oracle = fpk.digests_hex(fpk._fp_device_jit(flat, chunk_bytes))
+    lanes, lens = fpk._fp_prep_jit(flat, chunk_bytes)
+    kernel = fpk.digests_hex(
+        np.asarray(fpk.fingerprint_chunks(lanes, lens, interpret=True)))
+    return {"host": host, "oracle": oracle, "interpret-kernel": kernel}
+
+
+# ------------------------------------------------- implementation bit-identity
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([64, 256, 1024, 4096]),
+       dtype=st.sampled_from(DTYPES),
+       n=st.integers(min_value=1, max_value=6000),
+       seed=st.integers(min_value=0, max_value=2 ** 31))
+def test_fingerprint_impls_bit_identical(chunk, dtype, n, seed):
+    """Host / XLA oracle / Pallas-interpret digests agree word for word
+    over random sizes (ragged tails included), grids and dtypes."""
+    arr = _payload(n * np.dtype(dtype).itemsize, seed).view(dtype)
+    impls = _all_impl_hexes(arr, chunk)
+    assert impls["host"] == impls["oracle"] == impls["interpret-kernel"]
+    # and the ragged tail folds the true byte length, not the padded one
+    assert len(impls["host"]) == -(-arr.nbytes // chunk)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([256, 1024]),
+       dtype=st.sampled_from(DTYPES),
+       nchunks=st.integers(min_value=2, max_value=12),
+       seed=st.integers(min_value=0, max_value=2 ** 31))
+def test_dirty_sets_identical_across_impls(chunk, dtype, nchunks, seed):
+    """Random dirty masks: every implementation marks exactly the chunks
+    whose bytes changed — the delta planner's dirty set is engine-free."""
+    r = np.random.default_rng(seed)
+    nbytes = nchunks * chunk - r.integers(0, chunk)   # ragged last chunk
+    nbytes = max(int(nbytes) // np.dtype(dtype).itemsize, 1) \
+        * np.dtype(dtype).itemsize
+    base = _payload(nbytes, seed)
+    mut = base.copy()
+    mask = r.random(-(-nbytes // chunk)) < 0.4
+    for c in np.flatnonzero(mask):
+        lo = c * chunk
+        hi = min(lo + chunk, nbytes)
+        mut[lo:hi - 1 if hi - lo > 1 else hi] ^= np.uint8(0x5A)
+    truth = [bool((base[i * chunk:(i + 1) * chunk]
+                   != mut[i * chunk:(i + 1) * chunk]).any())
+             for i in range(-(-nbytes // chunk))]
+    a = _all_impl_hexes(base.view(dtype), chunk)
+    b = _all_impl_hexes(mut.view(dtype), chunk)
+    for impl in a:
+        dirty = [x != y for x, y in zip(a[impl], b[impl])]
+        assert dirty == truth, impl
+
+
+def test_single_lane_and_length_sensitivity():
+    """Odd weights: any single-lane change flips the digest; the length
+    fold separates a ragged chunk from its zero-padded twin."""
+    base = _payload(4096, 7)
+    h0 = fpk.digests_hex(fpk.fingerprint_chunks_host(base, 4096))[0]
+    seen = {h0}
+    r = np.random.default_rng(8)
+    for pos in r.choice(4096, 64, replace=False):
+        mut = base.copy()
+        mut[pos] ^= np.uint8(1 + r.integers(0, 255))
+        h = fpk.digests_hex(fpk.fingerprint_chunks_host(mut, 4096))[0]
+        assert h not in seen, f"collision at byte {pos}"
+        seen.add(h)
+    # trailing zeros vs truncation must differ (length fold)
+    padded = base.copy()
+    padded[4000:] = 0
+    h_pad = fpk.digests_hex(fpk.fingerprint_chunks_host(padded, 4096))[0]
+    h_cut = fpk.digests_hex(
+        fpk.fingerprint_chunks_host(base[:4000], 4096))[0]
+    assert h_pad != h_cut
+
+
+def test_digest_bytes_matches_chunk_table():
+    data = _payload(1234, 3)
+    assert fpk.digest_bytes(data.tobytes()) == fpk.digests_hex(
+        fpk.fingerprint_chunks_host(data, 1234))[0]
+    assert fpk.digest_bytes(b"") == "0" * 32
+
+
+# ------------------------------------------------------- fused quant kernel
+def test_fused_quant_fingerprint_matches_packed_payload():
+    """Kernel (interpret), XLA oracle and host-fp-of-pack() agree: the
+    fused digest covers exactly the bytes quant_codec would write."""
+    from repro.core import quant_codec
+
+    rng = np.random.default_rng(11)
+    arr = rng.standard_normal((64, 512)).astype(np.float32)
+    packed = quant_codec.pack(arr)
+    hb = quant_codec.HEADER.size
+    cb = 2048
+    rows = quant_codec.packed_rows(arr.size)
+    padded = jnp.zeros((rows, 512), jnp.float32) \
+        .at[:arr.size // 512].set(jnp.asarray(arr.reshape(-1, 512)))
+
+    q_o, s_o, d_oracle = fpk._quant_fp_ref_jit(padded, cb)
+    # oracle q/s bytes == the packed payload's q/s regions
+    qs = np.asarray(q_o).tobytes() + np.asarray(s_o).tobytes()
+    assert qs == packed[hb:]
+    want = fpk.digests_hex(
+        fpk.fingerprint_chunks_host(np.frombuffer(packed[hb:], np.uint8),
+                                    cb))
+    assert fpk.digests_hex(np.asarray(d_oracle)) == want
+
+    # fused Pallas kernel (interpret mode) over the q-only body chunks
+    body_rows = (arr.size * 1 // cb) * (cb // 512)
+    qk, sk, dk = fpk.quantize_fingerprint_blocks(padded[:body_rows], cb,
+                                                 interpret=True)
+    assert np.array_equal(np.asarray(qk), np.asarray(q_o)[:body_rows])
+    assert fpk.digests_hex(np.asarray(dk)) \
+        == want[:arr.size // cb]
+
+
+# -------------------------------------------------- digest-kind compat rules
+def test_digest_kind_flip_degrades_to_full_write(tmp_path):
+    """fp128 index + blake2b save (and vice versa) must full-write — a
+    kind mismatch can never produce a wrong (partial) delta."""
+    d = str(tmp_path / "flip")
+    rng = np.random.default_rng(5)
+    state = {"w": rng.standard_normal(8192).astype(np.float32)}
+    chunk = 4096
+    for first, second in ((True, False), (False, True)):
+        root = d + ("_fp_first" if first else "_bl_first")
+        with CheckpointManager(root, config=_cfg(), delta=True, keep=None,
+                               delta_chunk_bytes=chunk,
+                               device_fingerprint=first) as mgr:
+            m0 = mgr.save(0, state)
+        state2 = {"w": state["w"].copy()}
+        state2["w"][:1] += 1.0          # 1 dirty chunk under a SAME-kind diff
+        with CheckpointManager(root, config=_cfg(), delta=True, keep=None,
+                               delta_chunk_bytes=chunk,
+                               device_fingerprint=second) as mgr:
+            m1 = mgr.save(1, state2)
+            assert m1.chunks_dirty == m1.chunks_total == m0.chunks_total
+            got = mgr.restore(step=1)
+        assert np.array_equal(got["w"], state2["w"])
+        man = Manifest.load(os.path.join(root, "step_00000001"))
+        kinds = {sh.digest_kind for rec in man.tensors.values()
+                 for sh in rec.shards if delta_mod.is_chunked(sh)}
+        assert kinds == {DIGEST_FP128 if second else DIGEST_BLAKE2B}
+
+
+def test_blake2b_manifest_stays_pre_fp128_readable(tmp_path):
+    """device_fingerprint=False emits no 'digest' field and floats only to
+    the chunk format version — bytes a pre-§14 reader already accepts."""
+    import json
+
+    d = str(tmp_path / "bl")
+    state = {"w": np.arange(4096, dtype=np.float32)}
+    with CheckpointManager(d, config=_cfg(), delta=True, keep=None,
+                           delta_chunk_bytes=4096,
+                           device_fingerprint=False) as mgr:
+        mgr.save(0, state)
+    with open(os.path.join(d, "step_00000000", "manifest.json"),
+              "rb") as f:
+        doc = json.load(f)
+    assert doc["format_version"] < FORMAT_VERSION
+    for rec in doc["tensors"].values():
+        for sh in rec["shards"]:
+            assert "digest" not in sh
+
+
+def test_fp128_manifest_is_version_gated(tmp_path):
+    """fp128 manifests carry v4 + the digest field, so a pre-§14 reader
+    refuses them typed (future-version) instead of mis-diffing."""
+    d = str(tmp_path / "fp")
+    state = {"w": np.arange(4096, dtype=np.float32)}
+    with CheckpointManager(d, config=_cfg(), delta=True, keep=None,
+                           delta_chunk_bytes=4096) as mgr:
+        mgr.save(0, state)
+    man = Manifest.load(os.path.join(d, "step_00000000"))
+    assert man.format_version == FORMAT_VERSION
+    shards = [sh for rec in man.tensors.values() for sh in rec.shards
+              if delta_mod.is_chunked(sh)]
+    assert shards and all(sh.digest_kind == DIGEST_FP128 for sh in shards)
+
+
+# --------------------------------------------------- integration / d2h gates
+def test_device_state_d2h_accounting(tmp_path):
+    """Device-held (jax) state: D2H traffic is digest tables + dirty
+    gathers, never the clean bytes; restores stay bit-identical."""
+    d = str(tmp_path / "dev")
+    rng = np.random.default_rng(9)
+    host = rng.standard_normal((256, 1024)).astype(np.float32)  # 1 MB
+    chunk = 16 << 10
+    with CheckpointManager(d, config=_cfg(), delta=True, keep=None,
+                           delta_chunk_bytes=chunk) as mgr:
+        m0 = mgr.save(0, {"w": jnp.asarray(host)})
+        assert m0.d2h_bytes > 0
+        host2 = host.copy()
+        host2[:4] += 1.0                       # 1 of 64 chunks dirty
+        m1 = mgr.save(1, {"w": jnp.asarray(host2)})
+        assert m1.chunks_dirty < m1.chunks_total
+        assert m1.d2h_bytes <= (m1.written_bytes
+                                + 16 * m1.chunks_total + 4096)
+        got = mgr.restore(step=1)
+    assert np.array_equal(got["w"], host2)
+
+
+def test_quantized_device_delta_roundtrip(tmp_path):
+    """quant × fp128 × delta: packed-payload digests diff correctly and
+    the delta restore equals a full quantized save bit-for-bit."""
+    d = str(tmp_path / "qdev")
+    rng = np.random.default_rng(13)
+    mu = rng.standard_normal((512, 512)).astype(np.float32)
+    kw = dict(config=_cfg(), delta=True, keep=None,
+              delta_chunk_bytes=16 << 10,
+              quantize_prefixes=("opt/",), quantize_min_bytes=1024)
+    with CheckpointManager(d, **kw) as mgr:
+        m0 = mgr.save(0, {"opt": {"mu": jnp.asarray(mu)}})
+        mu2 = mu.copy()
+        mu2[:8] += 0.25
+        m1 = mgr.save(1, {"opt": {"mu": jnp.asarray(mu2)}})
+        assert 0 < m1.written_bytes < m0.written_bytes
+        got = mgr.restore(step=1)
+    with CheckpointManager(d + "_full", **{k: v for k, v in kw.items()
+                                           if k != "delta"}) as ref:
+        ref.save(1, {"opt": {"mu": mu2}})
+        want = ref.restore(step=1)
+    assert np.array_equal(got["opt"]["mu"], want["opt"]["mu"])
+
+
+def test_multiwriter_composition_uses_fp128(tmp_path):
+    from repro.core.multiwriter import MultiWriterCheckpointer
+
+    d = str(tmp_path / "mw")
+    rng = np.random.default_rng(17)
+    state = {"w": rng.standard_normal((512, 64)).astype(np.float32)}
+    with MultiWriterCheckpointer(d, 2, delta=True, keep=None,
+                                 delta_chunk_bytes=4096) as w:
+        w.save(0, state)
+        state["w"][:4] += 1.0
+        w.save(1, state)
+        got = w.restore(step=1)
+    assert np.array_equal(got["w"], state["w"])
+    man = Manifest.load(os.path.join(d, "step_00000001"))
+    kinds = {sh.digest_kind for rec in man.tensors.values()
+             for sh in rec.shards if delta_mod.is_chunked(sh)}
+    assert kinds == {DIGEST_FP128}
+
+
+def test_host_fallback_for_unsupported_dtypes(tmp_path):
+    """f64 / bool tensors (no 1/2/4-byte lane view or jax support) ride
+    the host path inside the same fp128 plan — same digest kind, exact."""
+    d = str(tmp_path / "f64")
+    rng = np.random.default_rng(19)
+    state = {"a": rng.standard_normal(3000),            # float64
+             "b": rng.random(2048) < 0.5,               # bool
+             "c": jnp.asarray(rng.standard_normal(2048).astype(np.float32))}
+    with CheckpointManager(d, config=_cfg(), delta=True, keep=None,
+                           delta_chunk_bytes=4096) as mgr:
+        mgr.save(0, state)
+        m = mgr.save(1, {"a": state["a"], "b": state["b"],
+                         "c": state["c"]})
+        assert m.chunks_dirty == 0        # bit-identical re-save: all clean
+        got = mgr.restore(step=1)
+    for k in state:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(state[k]))
+
+
+def test_device_digestable_predicate():
+    assert delta_mod._device_digestable(jnp.zeros(8, jnp.float32), 256)
+    assert delta_mod._device_digestable(jnp.zeros(8, jnp.int8), 256)
+    assert not delta_mod._device_digestable(np.zeros(8, np.float32), 256)
+    assert not delta_mod._device_digestable(jnp.zeros(8, jnp.float32), 254)
+    assert not delta_mod._device_digestable(jnp.zeros(8, jnp.bool_), 256)

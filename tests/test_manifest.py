@@ -183,14 +183,20 @@ def test_chunk_entry_roundtrip():
 
 def test_format_version_floats_with_content():
     """Non-delta manifests stay at the base version (old readers keep
-    loading them); chunk entries bump to v3."""
-    from repro.core.manifest import (BASE_FORMAT_VERSION, CHUNK_KIND,
-                                     ChunkRef, FORMAT_VERSION)
+    loading them); blake2b chunk entries bump to v3, fp128 digests to v4."""
+    from repro.core.manifest import (BASE_FORMAT_VERSION, CHUNK_FORMAT_VERSION,
+                                     CHUNK_KIND, ChunkRef, DIGEST_FP128,
+                                     FORMAT_VERSION)
     m = _manifest()
     assert m.to_json()["format_version"] == BASE_FORMAT_VERSION
     m.add_shard("d", "uint8", (4,),
                 ShardEntry(((0, 4),), "<chunks:x>", 0, 4, None, CHUNK_KIND,
                            (ChunkRef("00" * 16, "../chunkstore/p", 0, 4),)))
+    assert m.to_json()["format_version"] == CHUNK_FORMAT_VERSION
+    m.add_shard("e", "uint8", (4,),
+                ShardEntry(((0, 4),), "<chunks:y>", 0, 4, None, CHUNK_KIND,
+                           (ChunkRef("00" * 16, "../chunkstore/q", 0, 4),),
+                           digest=DIGEST_FP128))
     assert m.to_json()["format_version"] == FORMAT_VERSION
 
 
