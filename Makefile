@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: verify test chaos bench-smoke bench-restore-smoke \
-	bench-concurrency-smoke bench-delta-smoke
+	bench-concurrency-smoke bench-delta-smoke bench-remote-smoke
 
 # The ROADMAP tier-1 gate plus the chaos gate and the save-, restore-,
 # concurrency, and delta smoke benchmarks: regressions in the test suite,
@@ -9,11 +9,14 @@ PY ?= python
 # fingerprint-diff -> D2H gather window), pipelined blocking time,
 # streaming restore (wall-clock, staging bound, bit-identity), the
 # multi-writer commit protocol (one committed dir, merged manifest,
-# elastic bit-identity), or delta checkpointing (1%-dirty save writes
+# elastic bit-identity), delta checkpointing (1%-dirty save writes
 # <=10% of full bytes, bit-identical restore, refcount GC, fp128==blake2b
-# dirty sets, d2h_bytes <= dirty bytes + digest tables) fail loudly.
+# dirty sets, d2h_bytes <= dirty bytes + digest tables), or the remote
+# object tier (parallel hedged ranged restore >=2x single-stream, hedged
+# tail bounded by the hedge threshold, 1%-dirty dedup upload <=10% wire
+# bytes, bit-identical remote restores) fail loudly.
 verify: test chaos bench-smoke bench-restore-smoke bench-concurrency-smoke \
-	bench-delta-smoke
+	bench-delta-smoke bench-remote-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -36,3 +39,6 @@ bench-concurrency-smoke:
 
 bench-delta-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_delta --smoke
+
+bench-remote-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_remote --smoke

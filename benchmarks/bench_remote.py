@@ -1,0 +1,285 @@
+"""Object-store level-2 tier sweep (DESIGN.md §15).
+
+Publishes a checkpoint step to the in-process ``SimObjectStore`` (latency,
+per-request bandwidth, and stall pathologies dialed in via ``SimProfile``),
+then sweeps the ranged-restore knobs — range size × window (parallelism) ×
+hedge threshold — through the direct-to-pipeline stream restore
+(``RemoteCheckpointer(restore_mode="stream")``), recording wall-clock,
+effective GB/s, hedge counts, and the per-range time-to-first-completion
+p50/p99. Three dedicated experiments ride along in the same json:
+
+  · ``parallel_speedup``  — windowed ranged restore vs the same stack at
+    window=1 (the single-stream baseline) on a latency+bandwidth profile,
+  · ``stall_masking``     — a stall-heavy profile restored with and without
+    hedging: the hedged tail (p99 range time) must be bounded by the hedge
+    threshold, the unhedged tail by the store's stall time,
+  · ``dedup_upload``      — a 96 MB delta step re-uploaded after a 1%
+    mutation: over-the-wire bytes vs the full upload (chunkstore packs are
+    deduped via HEAD, the manifest is PUT last).
+
+``--smoke`` shrinks the sweep and gates on the §15 acceptance criteria:
+  · parallel hedged ranged restore >= 2x the single-stream wall-clock,
+  · with injected stalls, hedged p99 range time is bounded by the hedge
+    threshold (not the stall time) while the unhedged tail hits the stall,
+  · the 1%-dirty re-upload ships <= 10% of the full upload's wire bytes,
+  · every remote restore is bit-identical to the saved state.
+Exits nonzero on any violation — wired into ``make verify`` and CI.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Report, fresh_dir, write_summary
+
+# latency + per-request bandwidth: parallelism pays, stalls are rare
+SWEEP_PROFILE = dict(latency_s=0.004, jitter_s=0.002,
+                     bandwidth_bytes_s=600e6, seed=7)
+# the tail profile: 12% of range GETs stall for 0.6 s
+STALL_PROFILE = dict(latency_s=0.002, jitter_s=0.001,
+                     bandwidth_bytes_s=800e6, stall_prob=0.12, stall_s=0.6,
+                     seed=11)
+NO_HEDGE = 1e9
+
+
+def _state(total_mb: int) -> dict:
+    rng = np.random.default_rng(5)
+    rows = (total_mb << 20) // 3 // 4096
+    return {f"w{i}": rng.standard_normal((rows, 1024)).astype(np.float32)
+            for i in range(3)}
+
+
+def _mutate(state: dict, frac: float, rep: int) -> None:
+    for a in state.values():
+        rows = a.shape[0]
+        n = max(1, int(rows * frac))
+        off = (rep * 7919) % max(rows - n, 1)
+        a[off:off + n] += 1.0
+
+
+def _identical(got: dict, want: dict) -> bool:
+    return all(np.array_equal(np.asarray(got[k]), v)
+               for k, v in want.items())
+
+
+def _publish(base: str, store, state: dict, *, name: str,
+             **mgr_kw) -> "object":
+    """Save + synchronously upload step 0; returns the checkpointer."""
+    from repro.core import RemoteCheckpointer
+    d = os.path.join(base, f"pub_{name}")
+    os.makedirs(d, exist_ok=True)
+    mgr = RemoteCheckpointer(d, store, upload_async=False, **mgr_kw)
+    mgr.save(0, state)
+    return mgr
+
+
+def _stream_restore(base: str, store, cfg, step: int = 0):
+    """One fresh-machine stream restore; returns (state, wall_s, RangeStats)."""
+    from repro.core import RemoteCheckpointer
+    import shutil
+    import uuid
+    d = os.path.join(base, f"v_{uuid.uuid4().hex[:8]}")
+    os.makedirs(d, exist_ok=True)
+    v = RemoteCheckpointer(d, store, remote=cfg, restore_mode="stream")
+    t0 = time.perf_counter()
+    out = v.restore(step=step)
+    wall = time.perf_counter() - t0
+    stats = v._rmgr.engine.last_range_stats
+    v.close()
+    shutil.rmtree(d, ignore_errors=True)
+    return out, wall, stats
+
+
+def run_sweep(rep_log: Report, smoke: bool) -> dict:
+    from repro.core import RemoteConfig, SimObjectStore, SimProfile
+
+    state = _state(24 if smoke else 192)
+    total = sum(a.nbytes for a in state.values())
+    base = fresh_dir("remote_sweep")
+    store = SimObjectStore(os.path.join(base, "bucket"))
+    pub = _publish(base, store, state, name="sweep")
+    store.profile = SimProfile(**SWEEP_PROFILE)
+
+    ranges = [1 << 20, 4 << 20] if smoke else [1 << 20, 4 << 20, 16 << 20]
+    windows = [1, 4, 8] if smoke else [1, 4, 8, 16]
+    hedges = [0.1] if smoke else [0.1, 0.5]
+    out = {"state_bytes": total, "sweep_profile": SWEEP_PROFILE,
+           "stall_profile": STALL_PROFILE, "cells": {}}
+    for rb in ranges:
+        for w in windows:
+            for h in hedges:
+                cfg = RemoteConfig(range_bytes=rb, window=w, hedge_after_s=h)
+                got, wall, st = _stream_restore(base, store, cfg)
+                cell = {"range_mb": rb >> 20, "window": w,
+                        "hedge_after_s": h, "wall_s": round(wall, 4),
+                        "gbps": round(total / wall / 1e9, 3),
+                        "ranges": st.ranges, "hedged": st.hedged,
+                        "hedge_wins": st.hedge_wins,
+                        "p50_range_s": round(st.range_percentile(0.5), 4),
+                        "p99_range_s": round(st.range_percentile(0.99), 4),
+                        "bit_identical": _identical(got, state)}
+                out["cells"][f"r{rb >> 20}MB_w{w}_h{h}"] = cell
+                rep_log.add(config=f"r{rb >> 20}MB_w{w}_h{h}",
+                            gbps=cell["gbps"], wall_s=wall,
+                            hedged=st.hedged, p99_range_s=cell["p99_range_s"])
+    pub.close()
+    return out
+
+
+def check_speedup(out: dict, errors: list, smoke: bool) -> None:
+    """Parallel hedged ranged restore vs single-stream, same stack."""
+    from repro.core import RemoteConfig, SimObjectStore, SimProfile
+
+    state = _state(48 if smoke else 96)
+    total = sum(a.nbytes for a in state.values())
+    base = fresh_dir("remote_speedup")
+    store = SimObjectStore(os.path.join(base, "bucket"))
+    pub = _publish(base, store, state, name="speedup")
+    store.profile = SimProfile(**SWEEP_PROFILE)
+
+    single_cfg = RemoteConfig(range_bytes=1 << 20, window=1,
+                              hedge_after_s=NO_HEDGE)
+    par_cfg = RemoteConfig(range_bytes=1 << 20, window=8, hedge_after_s=0.1)
+    got_s, wall_s, _ = _stream_restore(base, store, single_cfg)
+    got_p, wall_p, st_p = _stream_restore(base, store, par_cfg)
+    speedup = wall_s / wall_p
+    out["parallel_speedup"] = {
+        "state_bytes": total, "single_wall_s": round(wall_s, 4),
+        "parallel_wall_s": round(wall_p, 4), "window": par_cfg.window,
+        "speedup": round(speedup, 2),
+        "parallel_gbps": round(total / wall_p / 1e9, 3)}
+    if speedup < 2.0:
+        errors.append(f"parallel ranged restore only {speedup:.2f}x the "
+                      f"single-stream wall (gate: >=2x)")
+    for name, got in (("single-stream", got_s), ("parallel", got_p)):
+        if not _identical(got, state):
+            errors.append(f"{name} remote restore is not bit-identical")
+    pub.close()
+
+
+def check_stall_masking(out: dict, errors: list, smoke: bool) -> None:
+    """Injected stalls: the hedged completion tail must be bounded by the
+    hedge threshold; without hedging it hits the store's stall time."""
+    from repro.core import RemoteConfig, SimObjectStore, SimProfile
+
+    state = _state(24)
+    base = fresh_dir("remote_stall")
+    store = SimObjectStore(os.path.join(base, "bucket"))
+    pub = _publish(base, store, state, name="stall")
+    store.profile = SimProfile(**STALL_PROFILE)
+
+    stall_s = STALL_PROFILE["stall_s"]
+    hedge = 0.08
+    rb = 512 << 10            # ~48 ranges: plenty of stall samples
+    base_cfg = dict(range_bytes=rb, window=8)
+    unhedged_cfg = RemoteConfig(hedge_after_s=NO_HEDGE, **base_cfg)
+    hedged_cfg = RemoteConfig(hedge_after_s=hedge, max_hedges=2, **base_cfg)
+    got_u, wall_u, st_u = _stream_restore(base, store, unhedged_cfg)
+    got_h, wall_h, st_h = _stream_restore(base, store, hedged_cfg)
+    u_max = max(st_u.range_seconds, default=0.0)
+    h_p99 = st_h.range_percentile(0.99)
+    out["stall_masking"] = {
+        "stall_s": stall_s, "hedge_after_s": hedge,
+        "unhedged": {"wall_s": round(wall_u, 4),
+                     "p99_range_s": round(st_u.range_percentile(0.99), 4),
+                     "max_range_s": round(u_max, 4)},
+        "hedged": {"wall_s": round(wall_h, 4),
+                   "p99_range_s": round(h_p99, 4),
+                   "max_range_s": round(max(st_h.range_seconds,
+                                            default=0.0), 4),
+                   "hedged": st_h.hedged, "hedge_wins": st_h.hedge_wins}}
+    if not _identical(got_u, state) or not _identical(got_h, state):
+        errors.append("stall-profile remote restore is not bit-identical")
+    if u_max < 0.9 * stall_s:
+        errors.append(f"stall profile never stalled the unhedged run "
+                      f"(max range {u_max:.3f}s < stall {stall_s}s)")
+    if st_h.hedged == 0:
+        errors.append("hedged run under a stall profile issued no hedges")
+    # the acceptance bound: the hedged tail is set by the hedge threshold
+    # (up to max_hedges re-issues + a fast fetch), never by the stall
+    bound = (1 + hedged_cfg.max_hedges) * hedge + 0.25
+    if h_p99 > bound:
+        errors.append(f"hedged p99 range time {h_p99:.3f}s exceeds the "
+                      f"hedge-threshold bound {bound:.3f}s")
+    if h_p99 >= 0.9 * stall_s:
+        errors.append(f"hedged p99 range time {h_p99:.3f}s is at the stall "
+                      f"time ({stall_s}s): stalls are not being masked")
+    if wall_h > wall_u:
+        errors.append(f"hedged restore wall {wall_h:.3f}s slower than "
+                      f"unhedged {wall_u:.3f}s under stalls")
+    pub.close()
+
+
+def check_dedup_upload(out: dict, errors: list) -> None:
+    """The §15 dedup gate, sized exactly as the acceptance criterion: a
+    96 MB delta step mutated 1% dirty re-uploads <= 10% of the full wire
+    bytes (chunkstore packs dedup via HEAD)."""
+    from repro.core import SimObjectStore
+
+    state = _state(96)
+    total = sum(a.nbytes for a in state.values())
+    base = fresh_dir("remote_dedup")
+    store = SimObjectStore(os.path.join(base, "bucket"))
+    mgr = _publish(base, store, state, name="dedup", delta=True,
+                   delta_chunk_bytes=256 << 10)
+    full_wire = store.bytes_in
+    full_up = mgr.last_upload_stats
+    _mutate(state, 0.01, 1)
+    mgr.save(1, state)
+    dirty_wire = store.bytes_in - full_wire
+    up = mgr.last_upload_stats
+    frac = dirty_wire / full_wire
+    out["dedup_upload"] = {
+        "state_bytes": total, "full_wire_bytes": full_wire,
+        "dirty_wire_bytes": dirty_wire, "wire_fraction": round(frac, 4),
+        "chunks_shipped": up.chunks_shipped,
+        "chunks_skipped": up.chunks_skipped,
+        "bytes_skipped": up.bytes_skipped,
+        "full_chunks_shipped": full_up.chunks_shipped,
+        "upload_seconds": round(up.seconds, 4)}
+    if frac > 0.10:
+        errors.append(f"1%-dirty re-upload moved {frac:.1%} of the full "
+                      f"upload's wire bytes (gate: <=10%)")
+    if up.chunks_skipped == 0:
+        errors.append("dedup re-upload skipped zero chunkstore packs")
+    # the delta step must stream-restore bit-exactly on a fresh machine
+    from repro.core import RemoteConfig
+    got, _, _ = _stream_restore(base, store, RemoteConfig(), step=1)
+    if not _identical(got, state):
+        errors.append("remote stream restore of the delta step is not "
+                      "bit-identical")
+    mgr.close()
+
+
+def run(smoke: bool = False):
+    rep = Report("bench_remote")
+    errors: list[str] = []
+    out = run_sweep(rep, smoke=smoke)
+    check_speedup(out, errors, smoke)
+    check_stall_masking(out, errors, smoke)
+    check_dedup_upload(out, errors)
+    write_summary("remote", out)
+    sp = out["parallel_speedup"]
+    sm = out["stall_masking"]
+    dd = out["dedup_upload"]
+    print(f"  -> BENCH_remote.json: {len(out['cells'])} cells; parallel "
+          f"{sp['speedup']}x single-stream; hedged p99 "
+          f"{sm['hedged']['p99_range_s']}s vs stall {sm['stall_s']}s; "
+          f"1%-dirty upload {dd['wire_fraction']:.1%} of full wire bytes")
+    path = rep.save()
+    for e in errors:
+        print(f"SMOKE FAIL: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print("  remote gates: parallel >=2x single-stream, hedged tail "
+          "bounded by hedge threshold, 1%-dirty upload <=10% wire bytes, "
+          "bit-identical restores")
+    return path
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

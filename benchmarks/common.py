@@ -9,10 +9,13 @@ the paper's 4-per-node.
 
 from __future__ import annotations
 
+import datetime
 import json
 import multiprocessing as mp
 import os
 import shutil
+import socket
+import subprocess
 import time
 from dataclasses import dataclass, field
 
@@ -23,6 +26,27 @@ RESULTS_DIR = os.path.join(REPO_ROOT, "results")
 SCRATCH = os.environ.get("REPRO_BENCH_DIR", "/root/bench_scratch")
 
 
+def _git_revision() -> str:
+    try:
+        return subprocess.run(
+            ["git", "-C", REPO_ROOT, "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def run_meta() -> dict:
+    """Provenance stamped into every summary: which commit, where, when —
+    so BENCH_*.json trajectories are comparable across PRs and hosts."""
+    return {
+        "git_revision": _git_revision(),
+        "hostname": socket.gethostname(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                        .isoformat(timespec="seconds"),
+    }
+
+
 def write_summary(tag: str, payload: dict) -> str:
     """THE one code path for tracked benchmark summaries.
 
@@ -30,10 +54,11 @@ def write_summary(tag: str, payload: dict) -> str:
     ``results/<name>.json``) and a curated summary tracked at the repo root
     as ``BENCH_<tag>.json`` so trajectories survive scratch cleanup. The
     benches used to hand-roll the latter; route them all through here.
+    Every summary is stamped with ``meta`` provenance (``run_meta``).
     """
     path = os.path.join(REPO_ROOT, f"BENCH_{tag}.json")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump({"meta": run_meta(), **payload}, f, indent=1)
     return path
 
 

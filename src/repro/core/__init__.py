@@ -12,6 +12,8 @@ Layers (bottom-up):
   multiwriter  N concurrent writer ranks, two-phase rank-0 merge commit
   tiered       tier-to-tier transfer engine: extent-hedged flush + prefetch
   multilevel   local→PFS two-level flush with hedged straggler mitigation
+  remote       object-store level-2 tier: hedged range reads, dedup upload,
+               direct-to-pipeline remote restore
 """
 
 from .aggregation import (ObjectSpec, Strategy, coalesce, partition_spans,
@@ -34,6 +36,10 @@ from .multiwriter import (CommitCoordinator, InProcessGroup, LocalShard,
                           MultiWriterCheckpointer, shard_state)
 from .pipeline import (PendingPut, RestorePipeline, RestoreTask,
                        SnapshotPipeline, build_save_puts)
+from .remote import (ObjectStore, RangeStats, RemoteCheckpointer,
+                     RemoteConfig, RemoteError, RemotePrefetcher, RemoteTier,
+                     RemoteTransferEngine, RemoteTransientError,
+                     SimObjectStore, SimProfile, UploadStats)
 from .tiered import RestorePrefetcher, TieredTransferEngine, TransferStats
 from .uring import IoUring, probe_io_uring
 
@@ -44,13 +50,16 @@ __all__ = [
     "FlushStats", "IOEngine", "IORequest", "InProcessGroup", "IoUring",
     "LocalShard", "Manifest", "ManifestError", "ManifestMergeError",
     "MultiLevelCheckpointer", "MultiSaveMetrics", "MultiWriterAborted",
-    "MultiWriterCheckpointer", "ObjectSpec", "PAGE", "PendingPut",
-    "PosixEngine", "ReadReq", "ReadStream", "RestoreMetrics",
-    "RestorePipeline", "RestorePrefetcher", "RestoreTask", "SaveItem",
-    "SaveMetrics", "SaveSpec", "SaveStream", "ShardEntry", "SnapshotEngine",
-    "SnapshotPipeline", "StoreGCStats", "Strategy", "TensorRecord",
-    "ThreadPoolEngine", "TieredTransferEngine", "TorchSaveEngine",
-    "TransferStats", "UringEngine", "build_save_puts", "coalesce", "gc_store",
+    "MultiWriterCheckpointer", "ObjectSpec", "ObjectStore", "PAGE",
+    "PendingPut", "PosixEngine", "RangeStats", "ReadReq", "ReadStream",
+    "RemoteCheckpointer", "RemoteConfig", "RemoteError", "RemotePrefetcher",
+    "RemoteTier", "RemoteTransferEngine", "RemoteTransientError",
+    "RestoreMetrics", "RestorePipeline", "RestorePrefetcher", "RestoreTask",
+    "SaveItem", "SaveMetrics", "SaveSpec", "SaveStream", "ShardEntry",
+    "SimObjectStore", "SimProfile", "SnapshotEngine", "SnapshotPipeline",
+    "StoreGCStats", "Strategy", "TensorRecord", "ThreadPoolEngine",
+    "TieredTransferEngine", "TorchSaveEngine", "TransferStats",
+    "UploadStats", "UringEngine", "build_save_puts", "coalesce", "gc_store",
     "make_cr_engine", "make_engine", "open_for", "partition_spans",
     "plan_delta", "plan_layout", "probe_io_uring", "shard_state",
 ]

@@ -54,7 +54,7 @@ from .multilevel import MultiLevelCheckpointer
 from .multiwriter import MultiWriterAborted, MultiWriterCheckpointer
 
 CELLS = ("solo", "delta", "ml", "ml-delta", "mw", "mw-delta",
-         "delta-gather")
+         "delta-gather", "remote", "remote-delta")
 _CHUNK = 2048         # delta chunk grid for campaign states (small & fast)
 
 
@@ -290,12 +290,14 @@ def run_trial(cell: str, rng: random.Random, base_dir: str,
     Raises InvariantViolation (keeping the trial dir) on any breakage."""
     root = tempfile.mkdtemp(prefix=f"chaos-{cell}-", dir=base_dir)
     remote = None
-    if cell.startswith("ml"):
+    if cell.startswith("ml") or cell.startswith("remote"):
         remote = tempfile.mkdtemp(prefix=f"chaos-{cell}-l1-", dir=base_dir)
     t = _Trial(cell, rng, root, remote)
     try:
         if cell.startswith("mw"):
             _trial_multiwriter(t, stats)
+        elif cell.startswith("remote"):
+            _trial_remote(t, stats)
         else:
             _trial_single(t, stats)
     except InvariantViolation:
@@ -607,6 +609,227 @@ def _trial_multiwriter(t: _Trial, stats: CampaignStats) -> None:
     except Exception:
         pass
     _verify_recovery(t, step if err is not None else None, pending_fp)
+
+
+def _pick_remote_fault(rng: random.Random, *, upload: bool) -> faults.Fault:
+    """Object-tier faults (§15): on uploads a crash/errno/torn PUT must
+    never publish the step (manifest-last), a stalled PUT just slows it;
+    on ranged reads stalls must be masked by hedging, short ranges by the
+    remainder re-request, and crash/errno must surface typed."""
+    if upload:
+        kind = rng.choice(["crash", "crash", "errno", "torn", "stall"])
+        at = rng.randint(1, 3)
+        if kind == "crash":
+            return faults.Fault(faults.OP_RPUT, at=at)
+        if kind == "errno":
+            return faults.Fault(faults.OP_RPUT, at=at,
+                                action=faults.A_ERRNO, err=_errno.EIO)
+        if kind == "torn":
+            return faults.Fault(faults.OP_RPUT, at=at, action=faults.A_TORN,
+                                frac=rng.choice([0.1, 0.5, 0.9]))
+        return faults.Fault(faults.OP_RPUT, at=at, action=faults.A_STALL,
+                            delay_s=0.05)
+    kind = rng.choice(["stall", "stall", "short", "short", "errno", "crash"])
+    at = rng.randint(1, 4)
+    if kind == "stall":
+        return faults.Fault(faults.OP_RGET, at=at, action=faults.A_STALL,
+                            delay_s=0.15)
+    if kind == "short":
+        return faults.Fault(faults.OP_RGET, at=at, action=faults.A_SHORT,
+                            frac=rng.choice([0.25, 0.5, 0.75]))
+    if kind == "errno":
+        return faults.Fault(faults.OP_RGET, at=at,
+                            action=faults.A_ERRNO, err=_errno.EIO)
+    return faults.Fault(faults.OP_RGET, at=at)
+
+
+def _remote_verifier(t: _Trial, store, cfg, mode: str):
+    """A fresh trainer on a NEW machine: empty local dir, so every restore
+    must come over the remote tier (stream or promote)."""
+    from .remote import RemoteCheckpointer
+    vdir = tempfile.mkdtemp(prefix="chaos-rverify-", dir=t.remote)
+    return RemoteCheckpointer(
+        vdir, store, remote=cfg, upload_async=False, restore_mode=mode,
+        engine="aggregated",
+        config=EngineConfig(backend="posix", direct=False),
+        keep=None, verify_crc=True)
+
+
+def _verify_remote(t: _Trial, store, cfg, mode: str) -> None:
+    """I1 at level 2: every step whose remote manifest object exists
+    restores bit-exactly on a fresh machine."""
+    v = _remote_verifier(t, store, cfg, mode)
+    for s in v.tier.committed_steps():
+        if s in t.committed:
+            try:
+                got = _fp(v.restore(step=s))
+            except Exception as e:
+                t.die(f"remote restore of published step {s} failed: {e!r}")
+            if got not in t.ok_fps(s):
+                t.die(f"remote restore of published step {s} is not "
+                      f"bit-exact")
+    v.close()
+
+
+def _trial_remote(t: _Trial, stats: CampaignStats) -> None:
+    """Level-2 object-tier trials: faulted uploads (crash mid-upload must
+    leave the step unpublished and a retry must converge via dedup),
+    faulted ranged restores (stall/short masked, crash/errno typed and
+    retryable), and remote object corruption (typed detection)."""
+    from .remote import RemoteCheckpointer, RemoteConfig, SimObjectStore
+    rng = t.rng
+    cfg = RemoteConfig(range_bytes=4096, window=4, hedge_after_s=0.02,
+                       min_bw_bytes_s=1e12, retry_backoff_s=0.001,
+                       put_workers=rng.choice([1, 4]))
+    store = SimObjectStore(os.path.join(t.remote, "bucket"))
+    mode = rng.choice(["stream", "stream", "promote"])
+    mgr = RemoteCheckpointer(t.root, store, remote=cfg, upload_async=False,
+                             restore_mode=mode, **_mgr_kw(t))
+    mgr.local.delta_gc_grace_s = 0.0
+
+    state = _make_state(rng)
+    step = rng.randint(1, 5)
+    for _ in range(rng.randint(1, 2)):
+        mgr.save(step, state)
+        t.committed[step] = _fp(state)
+        state = _mutate(state, rng)
+        step += rng.randint(1, 3)
+
+    scenario = rng.choice(["upload", "upload", "restore", "restore",
+                           "restore", "corrupt"])
+
+    if scenario == "corrupt":
+        mgr.close()
+        _trial_remote_corruption(t, stats, store, cfg, mode)
+        return
+
+    if scenario == "upload":
+        fault = _pick_remote_fault(rng, upload=True)
+        t.fault_desc = fault.describe()
+        plan = faults.FaultPlan([fault])
+        pending_fp = _fp(state)
+        err: BaseException | None = None
+        try:
+            with faults.inject(plan):
+                mgr.save(step, state)
+        except Exception as e:
+            err = e
+        fired = _record(t, stats, plan)
+        if err is not None and not _injected(err):
+            t.die(f"fault surfaced as unexpected error: {err!r}")
+        if err is not None and not fired:
+            t.die(f"error raised but no fault fired: {err!r}")
+        published = set(mgr.tier.committed_steps())
+        if err is not None:
+            # manifest-last: a failed upload must never have published the
+            # step (no remote manifest may reference un-uploaded objects)
+            if step in published:
+                t.die("crashed upload published the step's manifest")
+            # the step DID commit locally; a plain upload retry must
+            # converge, deduping whatever the failed attempt shipped
+            mgr.tier.upload_step(t.root, step)
+            if step not in mgr.tier.committed_steps():
+                t.die("upload retry after fault did not publish the step")
+        t.committed[step] = pending_fp
+        mgr.close()
+        _verify_remote(t, store, cfg, mode)
+        return
+
+    # restore scenario: fault the ranged reads of a fresh-machine restore
+    mgr.close()
+    fault = _pick_remote_fault(rng, upload=False)
+    t.fault_desc = fault.describe()
+    plan = faults.FaultPlan([fault])
+    last = max(t.committed)
+    v = _remote_verifier(t, store, cfg, mode)
+    err = None
+    try:
+        with faults.inject(plan):
+            got = _fp(v.restore(step=last))
+            if got != t.committed[last]:
+                t.die("remote restore under fault returned wrong bytes "
+                      "instead of failing")
+    except Exception as e:
+        err = e
+    fired = _record(t, stats, plan)
+    if err is not None and not _injected(err):
+        t.die(f"fault surfaced as unexpected error: {err!r}")
+    if err is not None and not fired:
+        t.die(f"error raised but no fault fired: {err!r}")
+    if fired and err is not None \
+            and fault.action in (faults.A_STALL, faults.A_SHORT):
+        # stalls are masked by hedged re-issue, short ranges by the
+        # remainder re-request: neither may surface as a failure
+        t.die(f"masked fault surfaced as error: {err!r}")
+    # failed or not, a retry on the same verifier must restore bit-exactly
+    try:
+        got = _fp(v.restore(step=last))
+    except Exception as e:
+        t.die(f"retry restore after remote fault failed: {e!r}")
+    if got != t.committed[last]:
+        t.die("retry restore after remote fault is not bit-exact")
+    v.close()
+
+
+def _trial_remote_corruption(t: _Trial, stats: CampaignStats, store, cfg,
+                             mode: str) -> None:
+    """Damage a published remote object in place: restore on a fresh
+    machine must fail typed (ManifestError / ChecksumError / RemoteError),
+    never silently return wrong bytes; undamaged steps stay restorable."""
+    from .remote import RemoteError, join_key
+    rng = t.rng
+    last = max(t.committed)
+    step_key = f"step_{last:08d}"
+    mkey = join_key(step_key, MANIFEST_NAME)
+    choices = ["manifest-trunc", "manifest-zero"]
+    if "delta" not in t.cell:
+        choices.append("data-flip")
+    kind = rng.choice(choices)
+    t.fault_desc = f"corrupt:remote-{kind}"
+    stats.faults += 1
+    stats.by_kind[f"corrupt:remote-{kind.split('-')[0]}"] += 1
+
+    if kind == "data-flip":
+        # flip one byte inside a REFERENCED extent (a flip in alignment
+        # padding would legitimately restore bit-exactly)
+        from .manifest import Manifest
+        m = Manifest.loads(store.get(mkey))
+        exts = [sh for rec in m.tensors.values() for sh in rec.shards
+                if getattr(sh, "kind", "extent") == "extent"
+                and not sh.path.startswith(delta_mod.STORE_PREFIX)]
+        if not exts:
+            stats.faults -= 1
+            stats.no_fire += 1
+            return
+        sh = exts[rng.randrange(len(exts))]
+        path = store.backing_path(join_key(step_key, sh.path))
+        faults.flip_byte(path, sh.offset + rng.randrange(max(sh.nbytes, 1)))
+    elif kind == "manifest-zero":
+        faults.zero_file(store.backing_path(mkey))
+    else:
+        path = store.backing_path(mkey)
+        faults.truncate_file(path, rng.randrange(
+            max(os.path.getsize(path) // 2, 1)))
+
+    v = _remote_verifier(t, store, cfg, mode)
+    try:
+        got = _fp(v.restore(step=last))
+        if got == t.committed[last]:
+            t.die("remote corruption went undetected (restore returned "
+                  "the pre-damage bytes?)")
+        t.die("restore silently returned corrupt remote bytes")
+    except (ManifestError, ChecksumError, RemoteError):
+        pass               # typed detection: the invariant
+    # other published steps are untouched and must still restore
+    for s in v.tier.committed_steps():
+        if s != last and s in t.committed:
+            try:
+                got = _fp(v.restore(step=s))
+            except Exception as e:
+                t.die(f"undamaged remote step {s} failed to restore: {e!r}")
+            if got not in t.ok_fps(s):
+                t.die(f"undamaged remote step {s} is not bit-exact")
+    v.close()
 
 
 # -------------------------------------------------------------------- campaign

@@ -12,6 +12,7 @@ from .base import (ChecksumError, CREngine, EngineConfig, IOStats, ReadReq,
                    ReadStream, SaveItem, SaveSpec, SaveStream, spec_of)
 from .aggregated import AggregatedEngine
 from .datastates import DataStatesEngine
+from .remote import RemoteReadEngine
 from .snapshot import SnapshotEngine
 from .torchsave import TorchSaveEngine
 
@@ -29,5 +30,5 @@ def make_cr_engine(name: str, config: EngineConfig | None = None,
 
 __all__ = ["ChecksumError", "CREngine", "EngineConfig", "IOStats", "ReadReq",
            "ReadStream", "SaveItem", "SaveSpec", "SaveStream", "spec_of",
-           "AggregatedEngine", "DataStatesEngine", "SnapshotEngine",
-           "TorchSaveEngine", "ENGINES", "make_cr_engine"]
+           "AggregatedEngine", "DataStatesEngine", "RemoteReadEngine",
+           "SnapshotEngine", "TorchSaveEngine", "ENGINES", "make_cr_engine"]

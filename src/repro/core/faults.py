@@ -55,7 +55,12 @@ OP_FALLOCATE = "fallocate"
 # fingerprint-diff and its put submission (DESIGN.md §14) — the window in
 # which a crash must not commit a manifest referencing never-copied chunks
 OP_GATHER = "gather"
-OP_KINDS = (OP_WRITE, OP_READ, OP_FSYNC, OP_RENAME, OP_FALLOCATE, OP_GATHER)
+# object-store requests (core/remote.py): ranged GET / PUT against the
+# level-2 tier — not syscalls, but the same one-shot schedule drives them
+OP_RGET = "rget"
+OP_RPUT = "rput"
+OP_KINDS = (OP_WRITE, OP_READ, OP_FSYNC, OP_RENAME, OP_FALLOCATE, OP_GATHER,
+            OP_RGET, OP_RPUT)
 
 # fault actions
 A_CRASH = "crash"    # simulate process death at the syscall
@@ -63,7 +68,8 @@ A_ERRNO = "errno"    # raise OSError(err) from the syscall
 A_TORN = "torn"      # persist a prefix of the write, then crash
 A_SHORT = "short"    # persist a prefix and return its length (no crash)
 A_CALL = "call"      # run a callback at the syscall, then perform it
-ACTIONS = (A_CRASH, A_ERRNO, A_TORN, A_SHORT, A_CALL)
+A_STALL = "stall"    # delay the op by ``delay_s``, then perform it
+ACTIONS = (A_CRASH, A_ERRNO, A_TORN, A_SHORT, A_CALL, A_STALL)
 
 QUARANTINE_SUBDIR = "quarantine"
 
@@ -113,6 +119,7 @@ class Fault:
     action: str = A_CRASH
     err: int = _errno.EIO
     frac: float = 0.5               # fraction of bytes persisted (torn/short)
+    delay_s: float = 0.25           # stall duration (action="stall")
     path_contains: str | None = None
     callback: object = None         # for action="call"
     seen: int = 0                   # eligible syscalls observed so far
@@ -199,6 +206,18 @@ def _raise_for(f: Fault, op: str):
     raise InjectedCrash(f"injected crash at {f.describe()}")
 
 
+def _soft(f: Fault) -> bool:
+    """call/stall are soft actions: run the side effect here, then the shim
+    performs the real op. Returns True when the fault was consumed."""
+    if f.action == A_CALL:
+        f.callback()
+        return True
+    if f.action == A_STALL:
+        time.sleep(f.delay_s)
+        return True
+    return False
+
+
 # --------------------------------------------------------------- syscall shims
 def pwrite(fd: int, buf, offset: int) -> int:
     f = _ACTIVE._consult(OP_WRITE) if _ACTIVE is not None else None
@@ -212,8 +231,7 @@ def pwrite(fd: int, buf, offset: int) -> int:
             raise InjectedCrash(
                 f"torn write: {n} of {len(mv)} bytes persisted")
         return n
-    if f.action == A_CALL:
-        f.callback()
+    if _soft(f):
         return os.pwrite(fd, buf, offset)
     _raise_for(f, OP_WRITE)
 
@@ -226,8 +244,7 @@ def preadv(fd: int, buffers, offset: int) -> int:
         mv = memoryview(buffers[0])
         keep = min(max(int(len(mv) * f.frac), 1), len(mv))
         return os.preadv(fd, [mv[:keep]], offset)
-    if f.action == A_CALL:
-        f.callback()
+    if _soft(f):
         return os.preadv(fd, buffers, offset)
     _raise_for(f, OP_READ)   # crash / errno / torn all abort the read
 
@@ -236,8 +253,7 @@ def _fsync_fault(fd: int) -> Fault | None:
     f = _ACTIVE._consult(OP_FSYNC) if _ACTIVE is not None else None
     if f is None:
         return None
-    if f.action == A_CALL:
-        f.callback()
+    if _soft(f):
         return None
     _raise_for(f, OP_FSYNC)
 
@@ -257,8 +273,7 @@ def replace(src: str, dst: str) -> None:
          if _ACTIVE is not None else None)
     if f is None:
         return os.replace(src, dst)
-    if f.action == A_CALL:
-        f.callback()
+    if _soft(f):
         return os.replace(src, dst)
     _raise_for(f, OP_RENAME)
 
@@ -267,8 +282,7 @@ def posix_fallocate(fd: int, offset: int, length: int) -> None:
     f = _ACTIVE._consult(OP_FALLOCATE) if _ACTIVE is not None else None
     if f is None:
         return os.posix_fallocate(fd, offset, length)
-    if f.action == A_CALL:
-        f.callback()
+    if _soft(f):
         return os.posix_fallocate(fd, offset, length)
     _raise_for(f, OP_FALLOCATE)
     # note: an A_ERRNO here is swallowed by _open_files' best-effort
@@ -288,8 +302,7 @@ def gather(key: str) -> None:
     f = _ACTIVE._consult(OP_GATHER, path=key) if _ACTIVE is not None else None
     if f is None:
         return
-    if f.action == A_CALL:
-        f.callback()
+    if _soft(f):
         return
     _raise_for(f, OP_GATHER)   # crash / errno / torn / short all abort
 
@@ -311,11 +324,31 @@ def file_write(f, data: bytes) -> None:
         f.flush()
         raise InjectedCrash(
             f"torn write: {keep} of {len(data)} bytes persisted")
-    if flt.action == A_CALL:
-        flt.callback()
+    if _soft(flt):
         f.write(data)
         return
     _raise_for(flt, OP_WRITE)
+
+
+def remote_op(op: str, key: str) -> Fault | None:
+    """Object-store request shim (core/remote.py ranged GET / PUT).
+
+    Unlike the syscall shims this cannot perform the op itself — the store
+    does the "I/O". crash/errno raise here (before any bytes move); soft
+    and data-shaping actions (stall, short, torn) are returned for the
+    store to apply at the protocol-appropriate point: a stalled request
+    sleeps before first byte, a short GET returns a prefix of the range,
+    a torn PUT persists a prefix of the staged object and crashes without
+    ever making it visible (PUT visibility is atomic)."""
+    f = _ACTIVE._consult(op, path=key) if _ACTIVE is not None else None
+    if f is None:
+        return None
+    if f.action == A_CALL:
+        f.callback()
+        return None
+    if f.action in (A_STALL, A_SHORT, A_TORN):
+        return f
+    _raise_for(f, op)
 
 
 # ------------------------------------------------------- post-commit corruptors

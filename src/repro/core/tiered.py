@@ -22,7 +22,9 @@ kernel-accelerated submission, request coalescing, aligned buffers).
     stalls megabytes, not a whole file. Losing attempts that outlive the
     transfer are handed to a background janitor with their engines, fds,
     and buffers — the caller's latency is bounded by the hedge, not by a
-    hung syscall.
+    hung syscall. The janitor drains the stragglers and parks the engine
+    pair in a bounded pool for the next transfer, so repeated hedged
+    transfers reuse engines instead of growing thread count monotonically.
 
 ``RestorePrefetcher`` is the restore-side consumer: it stages a remote
 checkpoint's manifest and lean object into a level-0 staging directory, then
@@ -123,6 +125,12 @@ class TieredTransferEngine:
         self._engine_factory = engine_factory   # (role) -> IOEngine, tests
         self._read_io: IOEngine | None = None   # reused across transfers
         self._write_io: IOEngine | None = None
+        # drained engine pairs parked by the janitor for reuse: repeated
+        # hedged transfers must not grow thread/engine count monotonically
+        self._engine_pool: list[tuple[IOEngine, IOEngine]] = []
+        self._pool_lock = threading.Lock()
+        self.engine_pool_limit = 2
+        self.engines_built = 0                  # test observability
         # serializes transfers on the shared engine pair (a background
         # flush and a restore prefetch may arrive from different threads)
         self._xfer_lock = threading.Lock()
@@ -158,6 +166,11 @@ class TieredTransferEngine:
 
     def close(self) -> None:
         self._discard_engines()
+        with self._pool_lock:
+            pairs, self._engine_pool = self._engine_pool[:], []
+        for r, w in pairs:
+            r.close()
+            w.close()
         self.pool.drain()
 
     # ------------------------------------------------------------- execution
@@ -171,14 +184,23 @@ class TieredTransferEngine:
 
     def _engines(self) -> tuple[IOEngine, IOEngine]:
         """Lazily build the read/write pair once; transfers are serialized
-        (flush waits on flush, restore on flush), so reuse is safe."""
+        (flush waits on flush, restore on flush), so reuse is safe. A pair
+        the janitor drained after a hedged transfer is reused before a new
+        one is built."""
         if self._read_io is None:
-            self._read_io = self._make_engine("read")
-            self._write_io = self._make_engine("write")
-            # hedged attempts must tolerate one attempt failing while its
-            # sibling succeeds — errors arrive as Completion.error
-            self._read_io.capture_errors = True
-            self._write_io.capture_errors = True
+            with self._pool_lock:
+                pair = (self._engine_pool.pop() if self._engine_pool
+                        else None)
+            if pair is not None:
+                self._read_io, self._write_io = pair
+            else:
+                self._read_io = self._make_engine("read")
+                self._write_io = self._make_engine("write")
+                self.engines_built += 2
+                # hedged attempts must tolerate one attempt failing while
+                # its sibling succeeds — errors arrive as Completion.error
+                self._read_io.capture_errors = True
+                self._write_io.capture_errors = True
         return self._read_io, self._write_io
 
     def _discard_engines(self) -> None:
@@ -186,6 +208,15 @@ class TieredTransferEngine:
             if e is not None:
                 e.close()
         self._read_io = self._write_io = None
+
+    def _park_engines(self, read_io: IOEngine, write_io: IOEngine) -> None:
+        """Return a drained pair to the bounded pool (close when full)."""
+        with self._pool_lock:
+            if len(self._engine_pool) < self.engine_pool_limit:
+                self._engine_pool.append((read_io, write_io))
+                return
+        read_io.close()
+        write_io.close()
 
     def _execute(self, ranges, files: int) -> TransferStats:
         """ranges: [(src_abs, dst_abs, file_size, [(start, end), ...])]"""
@@ -244,14 +275,38 @@ class TieredTransferEngine:
 
     def _spawn_janitor(self, read_io: IOEngine, write_io: IOEngine,
                        bufs, fds) -> None:
-        self._read_io = self._write_io = None   # next transfer: fresh pair
+        # detach the pair so the next transfer starts immediately; the
+        # janitor drains the stragglers and parks the pair for reuse
+        self._read_io = self._write_io = None
+
+        def drain(io: IOEngine, deadline: float) -> bool:
+            while io.inflight and time.perf_counter() < deadline:
+                try:
+                    io.poll(min_n=1, timeout_s=0.1)
+                except BaseException:
+                    pass           # loser failed after its hedge won
+            return not io.inflight
 
         def janitor():
+            deadline = time.perf_counter() + 60.0
+            ok = drain(read_io, deadline) and drain(write_io, deadline)
+            if ok:
+                # no attempt references the buffers or fds anymore: release
+                # buffers back to the shared pool and park the engine pair
+                for fd in fds:
+                    os.close(fd)
+                for b in bufs:
+                    b.release()
+                self._park_engines(read_io, write_io)
+                return
+            # a syscall is still hung past the deadline: fall back to the
+            # discard path — reusing its buffer or engine would hand a live
+            # kernel write target to the next transfer
             try:
-                read_io.close()    # waits for the straggling attempts
+                read_io.close()
                 write_io.close()
             except BaseException:
-                pass               # loser failed after its hedge won
+                pass
             for b in bufs:
                 b.destroy()
             for fd in fds:

@@ -18,9 +18,14 @@ from repro.core import chaos
 GATE_SEEDS = (0, 42)
 MIN_FAULTS = 200
 # every kind class must appear across the gate run (prefixes of by_kind);
-# crash:gather = a crash in the fingerprint-diff -> put D2H gather window
+# crash:gather = a crash in the fingerprint-diff -> put D2H gather window;
+# the r{put,get} / corrupt:remote classes cover the level-2 object tier
+# (DESIGN.md §15): crashed uploads, stalled/short/errored range reads,
+# and damaged remote objects
 REQUIRED_KINDS = ("crash:", "torn:", "short:", "errno:", "corrupt:",
-                  "crash:gather", "errno:gather")
+                  "crash:gather", "errno:gather",
+                  "crash:rput", "errno:rget", "stall:rget", "short:rget",
+                  "corrupt:remote")
 
 
 def main() -> int:

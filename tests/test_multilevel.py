@@ -165,6 +165,63 @@ class _AlwaysFailWrite(ThreadPoolEngine):
         return ThreadPoolEngine._do(r)
 
 
+class _ReArmStallWrite(ThreadPoolEngine):
+    """Stalls one write per ``arm()`` — a straggler on every transfer."""
+
+    def __init__(self):
+        super().__init__(workers=4)
+        self.lk = threading.Lock()
+        self.armed = True          # engines are built lazily mid-transfer
+
+    def arm(self):
+        with self.lk:
+            self.armed = True
+
+    def _do(self, r):
+        if r.op == OP_WRITE and r.nbytes >= 4096:
+            with self.lk:
+                fire, self.armed = self.armed, False
+            if fire:
+                time.sleep(0.7)
+        return ThreadPoolEngine._do(r)
+
+
+def test_hedge_loser_engines_pooled(tmp_path):
+    """The janitor drains hedge losers and parks the engine pair for
+    reuse: repeated hedged transfers must not grow the engine population
+    monotonically (each used to leak a live pair to a janitor thread)."""
+    stallers = []
+
+    def factory(role):
+        if role == "write":
+            e = _ReArmStallWrite()
+            stallers.append(e)
+            return e
+        return ThreadPoolEngine(workers=4)
+
+    data = np.random.default_rng(1).integers(
+        0, 256, size=1 << 20, dtype=np.uint8).tobytes()
+    src = tmp_path / "s.bin"
+    src.write_bytes(data)
+    eng = TieredTransferEngine(engine_factory=factory, chunk_bytes=1 << 20,
+                               hedge_after_s=0.2, min_bw_bytes_s=1e15)
+    for i in range(3):
+        for s in stallers:
+            s.arm()
+        dst = tmp_path / f"d{i}.bin"
+        stats = eng.transfer([(str(src), str(dst))])
+        assert stats.hedged >= 1
+        assert dst.read_bytes() == data
+        # wait for the janitor to drain the straggler and park the pair
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline and not eng._engine_pool:
+            time.sleep(0.05)
+        assert eng._engine_pool, "janitor did not park the drained pair"
+    assert eng.engines_built == 2, \
+        f"engine population grew: {eng.engines_built} built for 3 transfers"
+    eng.close()
+
+
 def test_all_attempts_failed_raises(tmp_path):
     """When every attempt for an extent fails, the transfer must fail."""
     src = tmp_path / "s.bin"

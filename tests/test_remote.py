@@ -1,0 +1,284 @@
+"""Object-store level-2 tier (DESIGN.md §15): simulator semantics, the
+parallel hedged range scheduler, chunk-dedup upload with manifest-last
+publish, direct-to-pipeline stream restore, and remote promotion."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, EngineConfig, Manifest,
+                        RemoteCheckpointer, RemoteConfig, RemotePrefetcher,
+                        RemoteTier, RemoteTransferEngine, SimObjectStore,
+                        SimProfile)
+from repro.core import faults
+from repro.core.aggregation import Extent
+from repro.core.remote import join_key
+
+
+def _state():
+    rng = np.random.default_rng(9)
+    return {"w": rng.standard_normal((64, 1024)).astype(np.float32),
+            "b": rng.standard_normal(512),
+            "step": 7}
+
+
+def _assert_same(got, want):
+    for k, v in want.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(v))
+
+
+# ------------------------------------------------------------- store basics
+def test_sim_store_put_get_head_list(tmp_path):
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    data = os.urandom(10_000)
+    meta = store.put("a/b/obj", data)
+    assert meta.size == len(data)
+    assert store.head("a/b/obj").size == len(data)
+    assert store.head("missing") is None
+    assert store.get_range("a/b/obj", 100, 50) == data[100:150]
+    assert store.get("a/b/obj") == data
+    assert store.list_prefix("a/") == ["a/b/obj"]
+    # atomic PUT: no tmp staging files are ever listed or left behind
+    assert not [k for k in store.list_prefix("a/") if ".tmp-put-" in k]
+    store.delete("a/b/obj")
+    assert store.head("a/b/obj") is None
+
+
+def test_join_key_normalizes_chunk_refs():
+    # a manifest's ../chunkstore/<pack> ref under a step key resolves to
+    # the tier-wide chunkstore object
+    assert join_key("p/step_00000001", "../chunkstore/x.pack") == \
+        "p/chunkstore/x.pack"
+    store = SimObjectStore("/tmp/does-not-matter")
+    with pytest.raises(ValueError):
+        store.backing_path("../escape")
+
+
+def test_partial_range_responses_reassembled(tmp_path):
+    """A store that always answers ranged GETs with a prefix still yields
+    complete objects (the scheduler re-requests the remainder)."""
+    store = SimObjectStore(str(tmp_path / "bucket"),
+                           SimProfile(partial_prob=1.0, seed=3))
+    data = os.urandom(300_000)
+    store.put("o", data)
+    assert store.get("o") == data
+    eng = RemoteTransferEngine(store, RemoteConfig(range_bytes=64 << 10))
+    dst = str(tmp_path / "o.local")
+    stats = eng.transfer([("o", dst)])
+    with open(dst, "rb") as f:
+        assert f.read() == data
+    assert stats.retries >= 1
+    eng.close()
+
+
+class _FlakyStore(SimObjectStore):
+    """First N ranged GETs fail with a transient 503."""
+
+    def __init__(self, root, fail_n):
+        super().__init__(root)
+        self.fail_n = fail_n
+
+    def get_range(self, key, offset, nbytes):
+        if self.fail_n > 0:
+            self.fail_n -= 1
+            from repro.core import RemoteTransientError
+            raise RemoteTransientError(503, key, "GET")
+        return super().get_range(key, offset, nbytes)
+
+
+def test_transient_errors_retried(tmp_path):
+    store = _FlakyStore(str(tmp_path / "bucket"), fail_n=2)
+    data = os.urandom(200_000)
+    store.put("o", data)
+    eng = RemoteTransferEngine(
+        store, RemoteConfig(range_bytes=1 << 20, retry_backoff_s=0.001))
+    dst = str(tmp_path / "o.local")
+    stats = eng.transfer([("o", dst)])
+    with open(dst, "rb") as f:
+        assert f.read() == data
+    assert stats.retries >= 2
+    eng.close()
+
+
+# ---------------------------------------------------------------- scheduler
+def test_hedged_stall_masked(tmp_path):
+    """An injected stall on one range is masked by a hedged duplicate: the
+    transfer completes well under the stall time, bytes exact."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    data = os.urandom(1 << 20)
+    store.put("o", data)
+    eng = RemoteTransferEngine(
+        store, RemoteConfig(range_bytes=256 << 10, window=4,
+                            hedge_after_s=0.05, min_bw_bytes_s=1e12))
+    fault = faults.Fault(faults.OP_RGET, at=1, action=faults.A_STALL,
+                         delay_s=1.2)
+    dst = str(tmp_path / "o.local")
+    t0 = time.perf_counter()
+    with faults.inject(faults.FaultPlan([fault])):
+        stats = eng.transfer([("o", dst)])
+    wall = time.perf_counter() - t0
+    assert wall < 1.0, f"stall was not masked (wall {wall:.2f}s)"
+    assert stats.hedged >= 1
+    assert stats.hedge_wins >= 1
+    with open(dst, "rb") as f:
+        assert f.read() == data
+    eng.close()
+
+
+def test_short_range_refetched(tmp_path):
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    data = os.urandom(512 << 10)
+    store.put("o", data)
+    eng = RemoteTransferEngine(store, RemoteConfig(range_bytes=128 << 10))
+    fault = faults.Fault(faults.OP_RGET, at=2, action=faults.A_SHORT,
+                         frac=0.5)
+    dst = str(tmp_path / "o.local")
+    with faults.inject(faults.FaultPlan([fault])):
+        stats = eng.transfer([("o", dst)])
+    with open(dst, "rb") as f:
+        assert f.read() == data
+    assert stats.retries >= 1
+    eng.close()
+
+
+# ----------------------------------------------------------- dedup uploads
+def test_upload_dedup_skips_clean_chunks(tmp_path):
+    """Re-uploading a lightly-mutated delta step ships only the new packs;
+    clean chunkstore packs dedup via HEAD."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    state = _state()
+    with RemoteCheckpointer(str(tmp_path / "l"), store, upload_async=False,
+                            delta=True, delta_chunk_bytes=4096,
+                            keep=None) as mgr:
+        mgr.save(0, state)
+        full_wire = store.bytes_in
+        full_up = mgr.last_upload_stats
+        assert full_up.chunks_shipped > 0 and full_up.chunks_skipped == 0
+        state["w"][:2] += 1.0                  # dirty a couple of chunks
+        mgr.save(1, state)
+        up = mgr.last_upload_stats
+        assert up.chunks_skipped > 0
+        assert up.bytes_skipped > 0
+        dirty_wire = store.bytes_in - full_wire
+        assert dirty_wire < full_wire / 2
+        assert mgr.tier.committed_steps() == [0, 1]
+    # the delta step stream-restores bit-exactly on a fresh machine
+    with RemoteCheckpointer(str(tmp_path / "v"), store,
+                            restore_mode="stream") as v:
+        _assert_same(v.restore(step=1), state)
+
+
+def test_upload_crash_never_publishes(tmp_path):
+    """A crashed upload must leave the step unpublished (manifest is PUT
+    last); the prior step stays restorable and a retry converges."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    s1, s2 = _state(), _state()
+    s2["w"] = s2["w"] + 1.0
+    mgr = RemoteCheckpointer(str(tmp_path / "l"), store, upload_async=False,
+                             keep=None)
+    mgr.save(1, s1)
+    fault = faults.Fault(faults.OP_RPUT, at=1)
+    with pytest.raises(faults.InjectedCrash):
+        with faults.inject(faults.FaultPlan([fault])):
+            mgr.save(2, s2)
+    assert mgr.tier.committed_steps() == [1]
+    with RemoteCheckpointer(str(tmp_path / "v1"), store,
+                            restore_mode="stream") as v:
+        _assert_same(v.restore(step=1), s1)
+    # retry: the local step committed, so a plain re-upload publishes it
+    mgr.tier.upload_step(mgr.local.directory, 2)
+    assert mgr.tier.committed_steps() == [1, 2]
+    with RemoteCheckpointer(str(tmp_path / "v2"), store,
+                            restore_mode="stream") as v:
+        _assert_same(v.restore(step=2), s2)
+    mgr.close()
+
+
+# ------------------------------------------------------------------ restore
+def test_stream_restore_no_local_staging(tmp_path):
+    """Stream restore on a fresh machine: bit-exact, and no local copy of
+    the checkpoint is ever staged (only the private metadata manifest)."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    state = _state()
+    with RemoteCheckpointer(str(tmp_path / "l"), store,
+                            upload_async=False) as mgr:
+        mgr.save(3, state)
+    with RemoteCheckpointer(str(tmp_path / "fresh"), store,
+                            restore_mode="stream") as v:
+        got = v.restore(step=3)
+        _assert_same(got, state)
+        assert v.last_restore_metrics is not None
+        assert v.local.all_steps() == []       # nothing promoted or staged
+        assert not [n for n in os.listdir(str(tmp_path / "fresh"))
+                    if n.startswith("step_")]
+
+
+def test_promote_restore_commits_level0(tmp_path):
+    """Promote mode: a full remote pull becomes a committed level-0 step
+    bit-exactly; the next restore is served locally."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    state = _state()
+    with RemoteCheckpointer(str(tmp_path / "l"), store,
+                            upload_async=False) as mgr:
+        mgr.save(5, state)
+    fresh = str(tmp_path / "fresh")
+    with RemoteCheckpointer(fresh, store, restore_mode="promote") as v:
+        got = v.restore(step=5)
+        _assert_same(got, state)
+        assert os.path.exists(os.path.join(fresh, "step_00000005",
+                                           "manifest.json"))
+        assert not [n for n in os.listdir(fresh) if ".tmp" in n]
+        assert v.local.all_steps() == [5]
+        # a second restore must not touch the remote tier's data path
+        gets_before = store.gets
+        _assert_same(v.restore(step=5), state)
+        assert store.gets == gets_before
+
+
+def test_promote_partial_pull_stays_staged(tmp_path):
+    """Fetching a subset of extents from the remote tier stages correct
+    bytes but must NOT commit the step at level 0."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    state = _state()
+    with RemoteCheckpointer(str(tmp_path / "l"), store,
+                            upload_async=False) as mgr:
+        mgr.save(4, state)
+    scratch = str(tmp_path / "scratch")
+    os.makedirs(scratch)
+    pf = RemotePrefetcher(store)
+    staged = pf.begin(4, scratch)
+    assert staged is not None and os.path.exists(
+        os.path.join(staged, "manifest.json"))
+    m = Manifest.loads(store.get("step_00000004/manifest.json"))
+    rec = next(iter(m.tensors.values()))
+    sh = rec.shards[0]
+    n = min(4096, sh.nbytes)
+    pf.fetch_extents(staged, [Extent(rec.key, sh.path, sh.offset, n)])
+    with open(os.path.join(staged, sh.path), "rb") as f:
+        f.seek(sh.offset)
+        got = f.read(n)
+    assert got == store.get_range(join_key("step_00000004", sh.path),
+                                  sh.offset, n)
+    final = os.path.join(scratch, "step_00000004")
+    assert pf.finish(staged, final) is False
+    assert not os.path.exists(staged) and not os.path.exists(final)
+    pf.close()
+
+
+def test_missing_step_restores_from_remote_union(tmp_path):
+    """all_steps is the union of both tiers; a step present only remotely
+    restores even after the local copy is retired by retention."""
+    store = SimObjectStore(str(tmp_path / "bucket"))
+    states = {}
+    with RemoteCheckpointer(str(tmp_path / "l"), store, upload_async=False,
+                            keep=1) as mgr:
+        for s in (1, 2, 3):
+            st = _state()
+            st["w"] = st["w"] + s
+            states[s] = st
+            mgr.save(s, st)
+        assert mgr.local.all_steps() == [3]    # keep=1 retired 1 and 2
+        assert mgr.all_steps() == [1, 2, 3]    # remote kept everything
+        _assert_same(mgr.restore(step=2), states[2])
