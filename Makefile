@@ -1,7 +1,8 @@
 PY ?= python
 
-.PHONY: verify test chaos bench-smoke bench-restore-smoke \
-	bench-concurrency-smoke bench-delta-smoke bench-remote-smoke
+.PHONY: verify test lint lint-baseline chaos bench-smoke \
+	bench-restore-smoke bench-concurrency-smoke bench-delta-smoke \
+	bench-remote-smoke
 
 # The ROADMAP tier-1 gate plus the chaos gate and the save-, restore-,
 # concurrency, and delta smoke benchmarks: regressions in the test suite,
@@ -15,11 +16,23 @@ PY ?= python
 # object tier (parallel hedged ranged restore >=2x single-stream, hedged
 # tail bounded by the hedge threshold, 1%-dirty dedup upload <=10% wire
 # bytes, bit-identical remote restores) fail loudly.
-verify: test chaos bench-smoke bench-restore-smoke bench-concurrency-smoke \
-	bench-delta-smoke bench-remote-smoke
+verify: lint test chaos bench-smoke bench-restore-smoke \
+	bench-concurrency-smoke bench-delta-smoke bench-remote-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# crlint (DESIGN.md §16): durability/concurrency invariant static analysis
+# over the checkpoint stack. Zero-new-findings gate: anything not in
+# crlint_baseline.txt fails the build.
+lint:
+	PYTHONPATH=src $(PY) -m repro.analysis.crlint src/repro
+
+# Accept the current findings into the baseline (prints a diff-stat).
+# Review the diff before committing — shrinking is progress, growth needs
+# a reason in the PR.
+lint-baseline:
+	PYTHONPATH=src $(PY) -m repro.analysis.crlint src/repro --write-baseline
 
 # Seeded fault-injection campaign (DESIGN.md §13): >=200 faults per fixed
 # seed across the delta x multiwriter x multilevel matrix, zero invariant

@@ -1,0 +1,9 @@
+"""Static analysis over the checkpoint stack.
+
+``crlint`` machine-checks the repo's two design invariants — every
+durability syscall routes through the ``faults.*`` chaos shims, and the
+fsync→rename→dir-fsync publish ordering — plus the lock/resource
+disciplines the concurrent tiers rely on.  ``python -m
+repro.analysis.crlint src/repro`` is the lint gate wired into
+``make verify`` and CI (DESIGN.md §16).
+"""

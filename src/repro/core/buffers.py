@@ -147,13 +147,16 @@ class BufferPool:
 
     def __init__(self, disabled: bool = False, max_cached_bytes: int | None = None,
                  max_outstanding_bytes: int | None = None):
-        self._free: dict[int, list[AlignedBuffer]] = {}
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
+        # crlint: guarded-by(_lock, _cond)
+        self._free: dict[int, list[AlignedBuffer]] = {}
         self.disabled = disabled
         self.max_cached_bytes = max_cached_bytes
         self.max_outstanding_bytes = max_outstanding_bytes  # acquire() budget
+        # crlint: guarded-by(_lock, _cond)
         self._cached_bytes = 0
+        # crlint: guarded-by(_lock, _cond)
         self._outstanding = 0     # bytes handed out and not yet released
         self.stats = PoolStats()
 
@@ -164,6 +167,8 @@ class BufferPool:
 
     @property
     def outstanding_bytes(self) -> int:
+        # crlint: allow(CRL003): deliberately racy stats read — a single
+        # int load for dashboards; callers never branch durability on it
         return self._outstanding
 
     def get(self, nbytes: int) -> AlignedBuffer:
@@ -192,7 +197,7 @@ class BufferPool:
                 self._cond.wait(0.5 if remaining is None else min(remaining, 0.5))
             return self._get_locked(cls)
 
-    def _get_locked(self, cls: int) -> AlignedBuffer:
+    def _get_locked(self, cls: int) -> AlignedBuffer:  # crlint: holds(_lock)
         buf = None
         if not self.disabled:
             lst = self._free.get(cls)

@@ -41,7 +41,6 @@ from __future__ import annotations
 
 import os
 import re
-import shutil
 import threading
 import time
 import uuid
@@ -97,6 +96,10 @@ def replace_dir(tmp: str, final: str) -> None:
             faults.replace(final, aside)
             asides.append(aside)
         try:
+            # the publish sources (data files, then manifest) were fsync'd
+            # by the engine and Manifest._write before any caller reaches
+            # this leaf; only the dir fsync lives here
+            # crlint: allow(CRL002): sources fsync'd upstream of this leaf
             faults.replace(tmp, final)
             break
         except (faults.InjectedCrash, faults.InjectedIOError):
@@ -111,7 +114,7 @@ def replace_dir(tmp: str, final: str) -> None:
     finally:
         os.close(fd)
     for aside in asides:
-        shutil.rmtree(aside, ignore_errors=True)
+        faults.rmtree(aside, ignore_errors=True)
 
 
 def write_owner(tmp: str) -> None:
@@ -395,8 +398,14 @@ class CheckpointManager:
                 final = os.path.join(self.directory, m.group(1))
                 if Manifest.exists(full) and not os.path.exists(final):
                     try:
+                        # rollback of an already-durable displaced aside;
+                        # recovery is idempotent — a crash here just re-runs
+                        # this scan on the next startup
+                        # crlint: allow(CRL002): idempotent startup rollback
                         faults.replace(full, final)  # publish crashed: roll back
                         continue
+                    except (faults.InjectedCrash, faults.InjectedIOError):
+                        raise   # never absorb injected faults (PR-6 class)
                     except OSError:
                         # a LIVE publisher landed the new version between our
                         # exists() check and the rename; if final is still
@@ -405,7 +414,7 @@ class CheckpointManager:
                             continue
             elif tmp_in_flight(full):
                 continue
-            shutil.rmtree(full, ignore_errors=True)
+            faults.rmtree(full, ignore_errors=True)
 
     def _make_tmp(self, step: int) -> str:
         """Create (or join, under a coordinator) the step's staging dir."""
@@ -432,7 +441,7 @@ class CheckpointManager:
         dropped = 0
         if self.keep is not None:
             for s in self.all_steps()[:-self.keep]:
-                shutil.rmtree(os.path.join(self.directory, step_dir_name(s)),
+                faults.rmtree(os.path.join(self.directory, step_dir_name(s)),
                               ignore_errors=True)
                 dropped += 1
         if (dropped or self.last_gc_stats is None) and (

@@ -247,6 +247,8 @@ class _AggSaveStream(SaveStream):
                 while self.io.inflight:
                     self._reap(1)
                 self._reap(0)
+            # crlint: allow(CRL005): abort() runs under an original error —
+            # cleanup here must never mask it; buffers below still released
             except BaseException:
                 pass   # inflight state unknown; buffers below still released
             self.io.close()
@@ -514,6 +516,8 @@ class _AggReadStream(ReadStream):
                                                      (None, None))
                         if buf is not None:
                             buf.release()
+            # crlint: allow(CRL005): abort() runs under an original error —
+            # cleanup here must never mask it; handlers below still released
             except BaseException:
                 pass   # inflight state unknown; handlers below still released
             if self.io is not None:

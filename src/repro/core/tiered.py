@@ -37,7 +37,6 @@ level-0 step so the next restore is local.
 from __future__ import annotations
 
 import os
-import shutil
 import threading
 import time
 from collections import deque
@@ -127,6 +126,7 @@ class TieredTransferEngine:
         self._write_io: IOEngine | None = None
         # drained engine pairs parked by the janitor for reuse: repeated
         # hedged transfers must not grow thread/engine count monotonically
+        # crlint: guarded-by(_pool_lock)
         self._engine_pool: list[tuple[IOEngine, IOEngine]] = []
         self._pool_lock = threading.Lock()
         self.engine_pool_limit = 2
@@ -245,6 +245,9 @@ class TieredTransferEngine:
                 dst_fds.append(dfd)
                 try:
                     faults.posix_fallocate(dfd, 0, size)
+                # modeled fallback for filesystems without fallocate — an
+                # injected ENOSPC here degrades to ftruncate by design
+                # crlint: allow(CRL005): fallocate fallback is the contract
                 except OSError:
                     os.ftruncate(dfd, size)
                 for start, end in intervals:
@@ -283,6 +286,8 @@ class TieredTransferEngine:
             while io.inflight and time.perf_counter() < deadline:
                 try:
                     io.poll(min_n=1, timeout_s=0.1)
+                # crlint: allow(CRL005): draining losing hedge attempts —
+                # the winner already committed; a loser's error is expected
                 except BaseException:
                     pass           # loser failed after its hedge won
             return not io.inflight
@@ -305,6 +310,8 @@ class TieredTransferEngine:
             try:
                 read_io.close()
                 write_io.close()
+            # crlint: allow(CRL005): closing a wedged engine past the drain
+            # deadline — nothing observes the janitor thread's errors
             except BaseException:
                 pass
             for b in bufs:
@@ -371,6 +378,11 @@ class TieredTransferEngine:
         def issue_read(seg: _Segment, hedge: bool = False):
             nonlocal token
             token += 1
+            # staged buffers are deliberately NOT pool-released on error — a
+            # hung async attempt may still target them; _execute_locked
+            # discards the engines (waiting out inflight attempts) and the
+            # buffers die with GC via AlignedBuffer.destroy
+            # crlint: allow(CRL004): buffers intentionally die with engines
             buf = self.pool.get(align_up(seg.nbytes, self.align))
             budget.add(buf.nbytes)
             reads[token] = (seg, buf)
@@ -568,7 +580,7 @@ class RestorePrefetcher:
         manifest = Manifest.load(src)
         staged = os.path.join(local_dir,
                               step_dir_name(step) + self.STAGING_SUFFIX)
-        shutil.rmtree(staged, ignore_errors=True)
+        faults.rmtree(staged, ignore_errors=True)
         os.makedirs(staged)
         try:
             self.transfer.transfer([(os.path.join(src, MANIFEST_NAME),
@@ -582,7 +594,7 @@ class RestorePrefetcher:
                     fetched.setdefault(e.path, _IntervalSet()).add(
                         e.offset, e.offset + e.nbytes)
         except BaseException:   # failed mid-stage: don't leak the dir
-            shutil.rmtree(staged, ignore_errors=True)
+            faults.rmtree(staged, ignore_errors=True)
             raise
         self._active[staged] = {"src": src, "manifest": manifest,
                                 "fetched": fetched}
@@ -637,22 +649,20 @@ class RestorePrefetcher:
         ) and all(covered(b.path, b.offset, b.nbytes)
                   for b in manifest.blobs.values())
         if not complete:
-            shutil.rmtree(staged, ignore_errors=True)
+            faults.rmtree(staged, ignore_errors=True)
             return False
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        faults.replace(staged, final)
-        fd = os.open(os.path.dirname(final), os.O_RDONLY)
-        try:
-            faults.fsync(fd)
-        finally:
-            os.close(fd)
+        # displaced-aside publish (checkpoint.replace_dir): promoting over an
+        # existing local step must never open a window where a crash leaves
+        # NEITHER the old nor the new copy — the naive rmtree-then-rename
+        # promote did exactly that
+        from .checkpoint import replace_dir
+        replace_dir(staged, final)
         return True
 
     def discard(self, staged: str) -> None:
         """Abandon an in-flight prefetch (restore failed mid-way)."""
         self._active.pop(staged, None)
-        shutil.rmtree(staged, ignore_errors=True)
+        faults.rmtree(staged, ignore_errors=True)
 
     def close(self) -> None:
         for staged in list(self._active):

@@ -292,3 +292,79 @@ def test_canary_unpinned_gc_reaps_fresh_chunks(tmp_ckpt_dir, monkeypatch):
         "unpinned GC did not corrupt the step — canary lost its teeth"
     assert run(patch_refs=False), \
         "real pinning failed under the same injection"
+
+
+# ------------------------------------------ shimmed rmtree + promote canary
+def test_torn_rmtree_leaves_partial_tree_and_crashes(tmp_path):
+    """faults.rmtree models a crash mid-deletion: a prefix of the files is
+    gone, the rest (and the dirs) survive — and the injected crash surfaces
+    even under ignore_errors=True."""
+    root = tmp_path / "victim"
+    for i in range(4):
+        d = root / f"sub{i}"
+        d.mkdir(parents=True)
+        (d / "f.bin").write_bytes(b"x" * 64)
+    plan = faults.FaultPlan([faults.Fault(faults.OP_RMTREE, at=1,
+                                          action=faults.A_TORN, frac=0.5)])
+    with faults.inject(plan):
+        with pytest.raises(faults.InjectedCrash):
+            faults.rmtree(str(root), ignore_errors=True)
+    assert plan.fired
+    left = list(root.rglob("f.bin"))
+    assert root.exists() and 0 < len(left) < 4
+
+
+def test_keep_gc_rmtree_is_fault_visible(tmp_ckpt_dir):
+    """The keep-GC tree deletion routes through the shim now: an injected
+    EIO on the old step's rmtree surfaces (it used to escape the chaos
+    plan entirely via raw shutil.rmtree), and since the new step published
+    before GC runs, both steps stay whole and restorable."""
+    mgr = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=1)
+    s1, s2 = _state(1), _state(2)
+    mgr.save(1, s1)
+    plan = faults.FaultPlan([faults.Fault(
+        faults.OP_RMTREE, at=1, action=faults.A_ERRNO, err=errno.EIO,
+        path_contains=ckpt_mod.step_dir_name(1))])
+    with faults.inject(plan):
+        with pytest.raises(Exception) as ei:
+            mgr.save(2, s2)
+    assert any(isinstance(e, faults.InjectedIOError)
+               for e in chaos._chain(ei.value))
+    assert plan.fired
+    mgr.close()
+    v = CheckpointManager(tmp_ckpt_dir, config=_cfg(), keep=None)
+    assert set(v.all_steps()) >= {1, 2}
+    assert _fp(v.restore(step=1)) == _fp(s1)
+    assert _fp(v.restore(step=2)) == _fp(s2)
+    v.close()
+
+
+def test_prefetch_promote_crash_never_loses_previous_copy(tmp_path):
+    """Canary for the rmtree-then-rename promote bug: RestorePrefetcher's
+    promote over an EXISTING level-0 step now goes through replace_dir's
+    displaced-aside protocol, so a crash at either rename leaves the old
+    copy on disk (as the final dir or a rollback-able .tmp-old- aside)."""
+    from repro.core.tiered import RestorePrefetcher
+    local = tmp_path / "local"
+    local.mkdir()
+    final = local / ckpt_mod.step_dir_name(7)
+    final.mkdir()
+    (final / "sentinel.bin").write_bytes(b"previous-version")
+    staged = str(final) + RestorePrefetcher.STAGING_SUFFIX
+    os.makedirs(staged)
+    with open(os.path.join(staged, "new.bin"), "wb") as f:
+        f.write(b"new-version")
+    pf = RestorePrefetcher(str(tmp_path / "remote"))
+    pf._active[staged] = {"manifest": Manifest(step=7, num_ranks=1, strategy="single_file"),
+                          "fetched": {}}
+    plan = faults.FaultPlan([faults.Fault(faults.OP_RENAME, at=2,
+                                          action=faults.A_CRASH)])
+    with faults.inject(plan):
+        with pytest.raises(faults.InjectedCrash):
+            pf.finish(staged, str(final))
+    assert plan.fired
+    asides = list(local.glob(ckpt_mod.step_dir_name(7) + ".tmp-old-*"))
+    assert final.exists() or (
+        asides
+        and (asides[0] / "sentinel.bin").read_bytes() == b"previous-version"
+    ), "crash mid-promote lost BOTH the old and the new copy"

@@ -1,0 +1,20 @@
+# crlint: fixture
+"""CRL003 canary — guarded fields touched without their lock."""
+import threading
+
+
+class Registry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        # crlint: guarded-by(_lock)
+        self._items: dict[str, int] = {}
+
+    def add(self, key: str, val: int) -> None:
+        self._items[key] = val               # CRL003: _lock not held
+
+    def size_unlocked(self) -> int:
+        return len(self._items)              # CRL003: _lock not held
+
+    def get(self, key: str) -> int:
+        with self._lock:
+            return self._items[key]          # fine: lock held

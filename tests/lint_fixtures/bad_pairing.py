@@ -1,0 +1,19 @@
+# crlint: fixture
+"""CRL004 canary — acquire without a visible release path."""
+
+
+def stage(pool, budget, n: int) -> bytes:
+    buf = pool.get(n)                        # CRL004: no release on error
+    budget.add(n)                            # CRL004: no sub/settle on error
+    data = bytes(buf.view(0, n))
+    buf.release()
+    budget.sub(n)
+    return data
+
+
+def stage_safe(pool, n: int) -> bytes:
+    buf = pool.get(n)
+    try:
+        return bytes(buf.view(0, n))
+    finally:
+        buf.release()

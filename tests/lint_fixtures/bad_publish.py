@@ -1,0 +1,22 @@
+# crlint: fixture
+"""CRL002 canary — publish renames missing the fsync protocol."""
+import os
+
+from repro.core import faults
+
+
+def publish_no_presync(tmp: str) -> None:
+    final = tmp[:-4]
+    faults.replace(tmp, final)               # CRL002: no fsync before
+    fd = os.open(".", os.O_RDONLY)
+    faults.fsync(fd)
+    os.close(fd)
+
+
+def publish_no_dirsync(fd: int, tmp: str, manifest_path: str) -> None:
+    faults.fsync(fd)
+    faults.replace(tmp, manifest_path)       # CRL002: no dir fsync after
+
+
+def publish_naked(tmp: str, commit_path: str) -> None:
+    faults.replace(tmp, commit_path)         # CRL002: both findings

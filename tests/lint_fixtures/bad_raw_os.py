@@ -1,0 +1,35 @@
+# crlint: fixture
+"""CRL001 canary — every raw syscall below must be flagged."""
+import os
+import shutil
+
+from repro.core import faults
+
+
+def publish(tmp: str, final: str) -> None:
+    os.rename(tmp, final)                    # CRL001: want faults.replace
+    os.replace(tmp, final)                   # CRL001: want faults.replace
+    fd = os.open(final, os.O_RDONLY)
+    os.fsync(fd)                             # CRL001: want faults.fsync
+    os.fdatasync(fd)                         # CRL001: want faults.fdatasync
+    os.close(fd)
+
+
+def write_block(fd: int, data: bytes) -> None:
+    os.pwrite(fd, data, 0)                   # CRL001: want faults.pwrite
+    os.preadv(fd, [bytearray(4)], 0)         # CRL001: want faults.preadv
+    os.posix_fallocate(fd, 0, 4096)          # CRL001: want faults.posix_fallocate
+
+
+def cleanup(path: str) -> None:
+    shutil.rmtree(path, ignore_errors=True)  # CRL001: want faults.rmtree
+
+
+def aliased(tmp: str, final: str) -> None:
+    from os import replace
+    replace(tmp, final)                      # CRL001: aliased raw import
+
+
+def fine(tmp: str, dst: str) -> None:
+    faults.replace(tmp, dst)
+    faults.rmtree(tmp, ignore_errors=True)

@@ -1,0 +1,40 @@
+# crlint: fixture
+"""CRL005 canary — handlers that absorb injected faults."""
+from repro.core import faults
+
+
+def swallow_all(path: str) -> None:
+    try:
+        faults.replace(path + ".tmp", path)
+    except Exception:                        # CRL005: absorbs InjectedCrash
+        pass
+
+
+def swallow_bare(fn) -> None:
+    try:
+        fn()
+    except:                                  # CRL005: bare except
+        pass
+
+
+def absorb_injected_errno(path: str) -> None:
+    try:
+        faults.replace(path + ".tmp", path)
+    except OSError:                          # CRL005: InjectedIOError is an OSError
+        pass
+
+
+def fine_reraise(path: str) -> None:
+    try:
+        faults.replace(path + ".tmp", path)
+    except (faults.InjectedCrash, faults.InjectedIOError):
+        raise
+    except OSError:
+        pass
+
+
+def fine_bound(fn, log) -> None:
+    try:
+        fn()
+    except Exception as e:
+        log(e)

@@ -1,0 +1,47 @@
+# crlint: fixture
+"""Clean twin — idiomatic code every checker must pass untouched."""
+import os
+import threading
+
+from repro.core import faults
+
+
+def publish(fd: int, tmp: str, final_path: str) -> None:
+    faults.fsync(fd)
+    faults.replace(tmp, final_path)
+    dfd = os.open(os.path.dirname(final_path) or ".", os.O_RDONLY)
+    try:
+        faults.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        # crlint: guarded-by(_lock)
+        self._n = 0
+
+    def bump(self) -> None:
+        with self._lock:
+            self._n += 1
+
+    def _bump_locked(self) -> None:  # crlint: holds(_lock)
+        self._n += 1
+
+
+def stage(pool, n: int) -> bytes:
+    buf = pool.get(n)
+    try:
+        return bytes(buf.view(0, n))
+    finally:
+        buf.release()
+
+
+def guarded(path: str) -> None:
+    try:
+        faults.replace(path + ".tmp", path)
+    except (faults.InjectedCrash, faults.InjectedIOError):
+        raise
+    except OSError:
+        pass

@@ -1,0 +1,162 @@
+"""crlint — the durability/concurrency linter must flag every canary
+fixture, pass the clean twins, hold a zero-new-findings gate at HEAD, and
+round-trip its baseline stably (DESIGN.md §16)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import crlint
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+SRC = os.path.join(REPO, "src", "repro")
+BASELINE = os.path.join(REPO, "crlint_baseline.txt")
+
+
+def _fixture_findings():
+    cwd = os.getcwd()
+    os.chdir(REPO)
+    try:
+        return crlint.analyze_paths([FIXTURES])
+    finally:
+        os.chdir(cwd)
+
+
+@pytest.fixture(scope="module")
+def findings():
+    return _fixture_findings()
+
+
+def _by(findings, fname):
+    return [f for f in findings if os.path.basename(f.path) == fname]
+
+
+# ------------------------------------------------------------ must flag
+def test_raw_syscalls_flagged(findings):
+    got = _by(findings, "bad_raw_os.py")
+    assert all(f.checker == "CRL001" for f in got)
+    assert len(got) == 9         # rename, replace, fsync, fdatasync,
+    #                              pwrite, preadv, fallocate, rmtree, alias
+    assert any("shutil.rmtree" in f.message for f in got)
+    assert any(f.scope == "aliased" for f in got)   # from-import alias
+
+
+def test_publish_ordering_flagged(findings):
+    got = _by(findings, "bad_publish.py")
+    assert all(f.checker == "CRL002" for f in got)
+    kinds = sorted(f.symbol for f in got)
+    assert kinds == ["replace-no-dirsync", "replace-no-dirsync",
+                     "replace-unsynced-src", "replace-unsynced-src"]
+
+
+def test_guarded_by_flagged(findings):
+    got = _by(findings, "bad_guard.py")
+    assert [f.checker for f in got] == ["CRL003", "CRL003"]
+    assert {f.scope for f in got} == {"Registry.add",
+                                      "Registry.size_unlocked"}
+
+
+def test_resource_pairing_flagged(findings):
+    got = _by(findings, "bad_pairing.py")
+    assert [f.checker for f in got] == ["CRL004"]
+    assert got[0].scope == "stage"       # stage_safe's finally passes
+
+
+def test_swallowed_faults_flagged(findings):
+    got = _by(findings, "bad_swallow.py")
+    assert [f.checker for f in got] == ["CRL005"] * 3
+    assert {f.scope for f in got} == {"swallow_all", "swallow_bare",
+                                      "absorb_injected_errno"}
+
+
+# -------------------------------------------------------- must NOT flag
+def test_clean_twin_passes(findings):
+    assert _by(findings, "clean_core.py") == []
+
+
+def test_allow_directive_suppresses(tmp_path):
+    f = tmp_path / "core" / "mod.py"
+    f.parent.mkdir()
+    f.write_text(
+        "# crlint: fixture\n"
+        "import os\n\n\n"
+        "def publish(tmp, dst):\n"
+        "    # crlint: allow(CRL001): canary suppression\n"
+        "    os.replace(tmp, dst)\n")
+    assert crlint.analyze_paths([str(f)]) == []
+
+
+def test_non_core_modules_exempt_from_shim_rule(tmp_path):
+    f = tmp_path / "bench.py"    # no `core` path part, no fixture marker
+    f.write_text("import os\n\n\ndef go(a, b):\n    os.replace(a, b)\n")
+    assert crlint.analyze_paths([str(f)]) == []
+
+
+# ------------------------------------------------------------ CLI + gate
+def _run_cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.crlint", *args],
+        capture_output=True, text=True, env=env, cwd=cwd)
+
+def test_cli_nonzero_on_fixtures():
+    p = _run_cli(FIXTURES, "--no-baseline")
+    assert p.returncode == 1
+    assert "CRL001" in p.stdout and "CRL005" in p.stdout
+
+
+def test_cli_clean_at_head_with_baseline():
+    p = _run_cli(SRC, "--baseline", BASELINE)
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "0 new finding(s)" in p.stdout
+
+
+def test_reverting_a_shim_fails_the_gate(tmp_path):
+    """The acceptance canary: faults.replace -> os.replace in a core
+    module must produce a fresh finding the committed baseline misses."""
+    victim = os.path.join(SRC, "core", "checkpoint.py")
+    with open(victim, "r", encoding="utf-8") as fh:
+        src = fh.read()
+    assert "faults.replace(" in src
+    bad = tmp_path / "core" / "checkpoint.py"
+    bad.parent.mkdir()
+    bad.write_text("# crlint: fixture\n"
+                   + src.replace("faults.replace(", "os.replace(", 1))
+    p = _run_cli(str(bad), "--baseline", BASELINE)
+    assert p.returncode == 1
+    assert "CRL001" in p.stdout and "os.replace" in p.stdout
+
+
+# ------------------------------------------------------------- baseline
+def test_baseline_round_trip_and_stable(tmp_path, findings):
+    bl = str(tmp_path / "bl.txt")
+    crlint.write_baseline(findings, bl)
+    first = open(bl).read()
+    fresh, suppressed = crlint.apply_baseline(
+        findings, crlint.load_baseline(bl))
+    assert fresh == [] and suppressed == len(findings)
+    # re-writing the same findings is byte-stable and reports no churn
+    added, removed = crlint.write_baseline(findings, bl)
+    assert (added, removed) == (0, 0)
+    assert open(bl).read() == first
+
+
+def test_baseline_keys_are_line_number_free(findings):
+    for f in findings:
+        assert f.key() == f"{f.checker}:{f.path}:{f.scope}:{f.symbol}"
+        assert str(f.line) not in f.key().split(":")
+
+
+def test_stale_baseline_entries_reported(tmp_path):
+    bl = tmp_path / "bl.txt"
+    bl.write_text("CRL001:tests/gone.py:nope:os.replace\n")
+    clean = tmp_path / "ok.py"
+    clean.write_text("x = 1\n")
+    p = _run_cli(str(clean), "--baseline", str(bl))
+    assert p.returncode == 0
+    assert "1 baseline entry stale" in p.stdout
