@@ -2,7 +2,7 @@ PY ?= python
 
 .PHONY: verify test lint lint-baseline chaos bench-smoke \
 	bench-restore-smoke bench-concurrency-smoke bench-delta-smoke \
-	bench-remote-smoke
+	bench-remote-smoke bench-trace-smoke
 
 # The ROADMAP tier-1 gate plus the chaos gate and the save-, restore-,
 # concurrency, and delta smoke benchmarks: regressions in the test suite,
@@ -15,9 +15,12 @@ PY ?= python
 # dirty sets, d2h_bytes <= dirty bytes + digest tables), or the remote
 # object tier (parallel hedged ranged restore >=2x single-stream, hedged
 # tail bounded by the hedge threshold, 1%-dirty dedup upload <=10% wire
-# bytes, bit-identical remote restores) fail loudly.
+# bytes, bit-identical remote restores), or the tracing gate (tracer
+# overhead <=5% of save wall, Perfetto timelines show pipelined stage
+# overlap, stall attribution sums to the root wall) fail loudly.
 verify: lint test chaos bench-smoke bench-restore-smoke \
-	bench-concurrency-smoke bench-delta-smoke bench-remote-smoke
+	bench-concurrency-smoke bench-delta-smoke bench-remote-smoke \
+	bench-trace-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -55,3 +58,6 @@ bench-delta-smoke:
 
 bench-remote-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_remote --smoke
+
+bench-trace-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_trace_overhead --smoke

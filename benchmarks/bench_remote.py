@@ -282,4 +282,6 @@ def run(smoke: bool = False):
 
 
 if __name__ == "__main__":
+    from benchmarks.common import trace_from_argv
+    trace_from_argv()
     run(smoke="--smoke" in sys.argv)

@@ -139,4 +139,6 @@ def run(full_scale: bool = False, quick: bool = False):
 
 if __name__ == "__main__":
     import sys
+    from benchmarks.common import trace_from_argv
+    trace_from_argv()
     run(full_scale="--full-scale" in sys.argv, quick="--quick" in sys.argv)

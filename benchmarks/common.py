@@ -59,7 +59,32 @@ def write_summary(tag: str, payload: dict) -> str:
     path = os.path.join(REPO_ROOT, f"BENCH_{tag}.json")
     with open(path, "w") as f:
         json.dump({"meta": run_meta(), **payload}, f, indent=1)
+    maybe_export_trace(tag)
     return path
+
+
+def maybe_export_trace(tag: str) -> str | None:
+    """When the bench ran with ``--trace`` (tracer enabled), drop the
+    Perfetto timeline next to the summary: ``BENCH_<tag>.trace.json``.
+    Load it in ui.perfetto.dev to see per-tier stage overlap."""
+    from repro.core import trace
+    if not trace.is_enabled():
+        return None
+    path = os.path.join(REPO_ROOT, f"BENCH_{tag}.trace.json")
+    trace.export_perfetto(path)
+    return path
+
+
+def trace_from_argv(argv=None) -> bool:
+    """Shared ``--trace`` flag: span tracer on for the whole bench run;
+    ``write_summary`` then drops a Perfetto timeline beside each
+    ``BENCH_<tag>.json``. Returns whether tracing was enabled."""
+    import sys
+    on = "--trace" in (sys.argv if argv is None else argv)
+    if on:
+        from repro.core import trace
+        trace.enable()
+    return on
 
 
 def drop_caches() -> bool:

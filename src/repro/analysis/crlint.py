@@ -37,6 +37,14 @@ CRL005  swallowed injected faults: an ``except`` that could absorb an
         error-capture; ``OSError`` with ``faults.*`` calls in the try
         body and no preceding Injected* re-raise clause) — the bug
         class PR 6 fixed in ``replace_dir``'s retry loop.
+CRL006  clock-epoch discipline: direct ``time.time()`` /
+        ``time.perf_counter()`` / ``time.monotonic()`` (and ``_ns``
+        variants) in ``core/**`` bypass the tracer's shared monotonic
+        epoch — timestamps from different modules stop being
+        comparable and spans can't be correlated.  Route timing
+        through ``trace.clock()``; genuinely wall-clock sites (pidfile
+        epochs, mtime comparisons) annotate ``allow(CRL006)``.
+        ``trace.py`` itself (the clock implementation) is exempt.
 
 Annotations (source comments)
 -----------------------------
@@ -77,6 +85,7 @@ CHECKERS = {
     "CRL003": "guarded-by lock discipline",
     "CRL004": "resource acquire/release pairing",
     "CRL005": "except clause can swallow injected faults",
+    "CRL006": "un-epoched clock call (use trace.clock)",
 }
 
 DEFAULT_BASELINE = "crlint_baseline.txt"
@@ -92,6 +101,11 @@ RAW_SHIMS = {
     "os.posix_fallocate": "faults.posix_fallocate",
     "shutil.rmtree": "faults.rmtree",
 }
+
+# clock calls that fragment the shared trace epoch (CRL006)
+CLOCK_CALLS = {"time.time", "time.time_ns", "time.perf_counter",
+               "time.perf_counter_ns", "time.monotonic",
+               "time.monotonic_ns"}
 
 FSYNC_CALLS = ("faults.fsync", "faults.fdatasync")
 PUBLISH_DST_RE = re.compile(r"manifest|publish|commit|final|\bfin\b", re.I)
@@ -171,6 +185,7 @@ class Module:
         parts = rel.replace(os.sep, "/").split("/")
         self.is_core = "core" in parts or self.is_fixture
         self.is_faults = os.path.basename(rel) == "faults.py"
+        self.is_trace = os.path.basename(rel) == "trace.py"
         self.units: list[Unit] = []
         self.scope_of: dict[int, str] = {}   # id(node) -> qualname
         self._collect_units()
@@ -252,6 +267,11 @@ class Module:
         """`from os import replace as rp` -> {'rp': 'os.replace'}."""
         out: dict[str, str] = {}
         for n in ast.walk(self.tree):
+            if isinstance(n, ast.ImportFrom) and n.module == "time":
+                for a in n.names:
+                    full = f"time.{a.name}"
+                    if full in CLOCK_CALLS:
+                        out[a.asname or a.name] = full
             if isinstance(n, ast.ImportFrom) and n.module in ("os", "shutil"):
                 for a in n.names:
                     full = f"{n.module}.{a.name}"
@@ -272,7 +292,7 @@ def check_shim_coverage(mod: Module) -> list[Finding]:
         if d is None:
             continue
         raw = d if d in RAW_SHIMS else mod.raw_aliases.get(d)
-        if raw is None:
+        if raw not in RAW_SHIMS:
             continue
         if mod.allowed("CRL001", n):
             continue
@@ -502,6 +522,31 @@ def check_resource_pairing(mod: Module) -> list[Finding]:
     return out
 
 
+# ================================================= CRL006 clock discipline
+def check_clock_epoch(mod: Module) -> list[Finding]:
+    """Direct stdlib clock reads in core/** fragment the tracer's shared
+    monotonic epoch (trace.clock()); wall-clock sites must say so."""
+    if not mod.is_core or mod.is_trace:
+        return []
+    out = []
+    for n in ast.walk(mod.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        d = _dotted(n.func)
+        if d is None:
+            continue
+        raw = d if d in CLOCK_CALLS else mod.raw_aliases.get(d)
+        if raw not in CLOCK_CALLS:
+            continue
+        if mod.allowed("CRL006", n):
+            continue
+        out.append(Finding(
+            "CRL006", mod.rel, n.lineno, mod.scope(n), raw,
+            f"{raw}() bypasses the shared trace epoch; use trace.clock() "
+            f"(or annotate allow(CRL006) for a true wall-clock site)"))
+    return out
+
+
 # ============================================== CRL005 swallowed injections
 def _caught_names(handler: ast.ExceptHandler) -> set[str]:
     t = handler.type
@@ -601,6 +646,7 @@ def analyze_paths(paths: list[str]) -> list[Finding]:
         findings += check_guarded_by(m)
         findings += check_resource_pairing(m)
         findings += check_swallowed_faults(m)
+        findings += check_clock_epoch(m)
     findings.sort(key=lambda f: (f.path, f.line, f.checker, f.symbol))
     return findings
 

@@ -12,7 +12,8 @@ from __future__ import annotations
 import ctypes
 import mmap
 import threading
-import time
+
+from . import trace
 from dataclasses import dataclass, field
 
 PAGE = mmap.PAGESIZE  # typically 4096; also the O_DIRECT alignment quantum
@@ -184,12 +185,12 @@ class BufferPool:
         Raises TimeoutError after ``timeout`` seconds."""
         cls = self.size_class(nbytes)
         limit = self.max_outstanding_bytes if budget is None else budget
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else trace.clock() + timeout
         with self._cond:
             while (limit is not None and self._outstanding
                    and self._outstanding + cls > limit):
                 remaining = None if deadline is None \
-                    else deadline - time.monotonic()
+                    else deadline - trace.clock()
                 if remaining is not None and remaining <= 0:
                     raise TimeoutError(
                         f"buffer budget exhausted: {self._outstanding} B "

@@ -39,14 +39,13 @@ import os
 import random
 import shutil
 import tempfile
-import time
 from collections import Counter
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from . import delta as delta_mod
-from . import faults
+from . import faults, trace
 from .checkpoint import CheckpointManager
 from .engines import ChecksumError, EngineConfig
 from .manifest import MANIFEST_NAME, ManifestError
@@ -293,17 +292,29 @@ def run_trial(cell: str, rng: random.Random, base_dir: str,
     if cell.startswith("ml") or cell.startswith("remote"):
         remote = tempfile.mkdtemp(prefix=f"chaos-{cell}-l1-", dir=base_dir)
     t = _Trial(cell, rng, root, remote)
+    # fresh per-trial ring: a violation dumps exactly this trial's spans,
+    # fault injections included, next to the kept dir
+    owned_tracer = not trace.is_enabled()
+    if owned_tracer:
+        trace.enable()
     try:
-        if cell.startswith("mw"):
-            _trial_multiwriter(t, stats)
-        elif cell.startswith("remote"):
-            _trial_remote(t, stats)
-        else:
-            _trial_single(t, stats)
+        try:
+            if cell.startswith("mw"):
+                _trial_multiwriter(t, stats)
+            elif cell.startswith("remote"):
+                _trial_remote(t, stats)
+            else:
+                _trial_single(t, stats)
+        except InvariantViolation:
+            raise                  # keep the dir for forensics
+        except Exception as e:
+            t.die(f"unexpected trial error: {e!r}")
     except InvariantViolation:
-        raise                      # keep the dir for forensics
-    except Exception as e:
-        t.die(f"unexpected trial error: {e!r}")
+        trace.export_perfetto(os.path.join(root, "trace.json"))
+        raise
+    finally:
+        if owned_tracer:
+            trace.disable()
     shutil.rmtree(root, ignore_errors=True)
     if remote is not None:
         shutil.rmtree(remote, ignore_errors=True)
@@ -843,7 +854,7 @@ def run_campaign(seed: int = 0, *, min_faults: int = 200,
     (seed, trial index, cell). Raises ``InvariantViolation`` with a
     reproduction line on the first broken invariant."""
     stats = CampaignStats(seed=seed)
-    t0 = time.perf_counter()
+    t0 = trace.clock()
     owned_base = None
     if base_dir is None:
         owned_base = tempfile.mkdtemp(prefix=f"chaos-campaign-{seed}-")
@@ -875,7 +886,7 @@ def run_campaign(seed: int = 0, *, min_faults: int = 200,
             if only_trial is not None:
                 break
     finally:
-        stats.elapsed = time.perf_counter() - t0
+        stats.elapsed = trace.clock() - t0
         if owned_base is not None and not failed:
             shutil.rmtree(owned_base, ignore_errors=True)
     return stats

@@ -50,7 +50,7 @@ import jax
 import numpy as np
 
 from . import delta as delta_mod
-from . import faults
+from . import faults, trace
 from .aggregation import ObjectSpec, Strategy, rank_padded_total
 from .engines import (ChecksumError, EngineConfig, ReadReq, SaveItem,
                       make_cr_engine)
@@ -120,6 +120,8 @@ def replace_dir(tmp: str, final: str) -> None:
 def write_owner(tmp: str) -> None:
     import socket
     with open(os.path.join(tmp, OWNER_NAME), "w") as f:
+        # crlint: allow(CRL006): pidfile epoch must be wall-clock (compared
+        # against /proc btime by readers on other boots/hosts)
         f.write(f"{os.getpid()} {time.time():.3f} {socket.gethostname()}")
 
 
@@ -147,6 +149,7 @@ def _proc_start_time(pid: int) -> float | None:
 
 def _dir_is_young(path: str) -> bool:
     try:
+        # crlint: allow(CRL006): mtime comparison needs the wall clock
         return time.time() - os.path.getmtime(path) < TMP_GRACE_S
     except OSError:
         return False       # vanished concurrently
@@ -459,7 +462,7 @@ class CheckpointManager:
         writes overlap per extent; async mode returns after submission.
         Legacy (``streaming=False``): full host copy first, flush after."""
         self.wait()  # at most one checkpoint in flight
-        t_start = time.perf_counter()
+        t_start = trace.clock()
         rank = jax.process_index() if rank is None else rank
         num_ranks = jax.process_count() if num_ranks is None else num_ranks
         if self.streaming:
@@ -471,10 +474,12 @@ class CheckpointManager:
         metrics = SaveMetrics(step=step, mode=mode)
 
         # Stage 1: tensor extraction + lean-object serialization.
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         tensors, lean_tree = extract_tensors(state)
         lean_blob = serialize_lean(lean_tree)
-        metrics.extract_seconds = time.perf_counter() - t0
+        t1 = trace.clock()
+        metrics.extract_seconds = t1 - t0
+        trace.complete("extract", t0, t1, attrs={"step": step})
 
         if self.streaming:
             self._save_streaming(step, tensors, lean_blob, rank, num_ranks,
@@ -518,43 +523,17 @@ class CheckpointManager:
 
         def run():
             try:
-                run_puts, plan = puts, None
-                totals = rank_totals
-                if self.delta:
-                    # fingerprint + diff on the worker: zero blocking cost
-                    plan = delta_mod.plan_delta(
-                        puts, self._load_delta_index(),
-                        chunk_bytes=self.delta_chunk_bytes,
-                        checksum=self.config.checksum,
-                        device_fingerprint=self.device_fingerprint)
-                    metrics.fingerprint_seconds = plan.fingerprint_seconds
-                    metrics.diff_seconds = plan.diff_seconds
-                    metrics.d2h_bytes = plan.d2h_bytes
-                    metrics.chunks_total = plan.chunks_total
-                    metrics.chunks_dirty = plan.chunks_dirty
-                    run_puts = plan.puts
-                    totals = self._single_file_totals(run_puts, rank,
-                                                      num_ranks)
-                t1 = time.perf_counter()
-                manifest = pipeline.run(tmp, run_puts, step=step, rank=rank,
-                                        num_ranks=num_ranks,
-                                        rank_totals=totals,
-                                        on_staged=staged.set)
-                metrics.flush_seconds = time.perf_counter() - t1
-                st = self.engine.last_save_stats
-                metrics.d2h_seconds = st.copy_seconds + st.alloc_seconds
-                if plan is not None:
-                    manifest = delta_mod.apply_plan(manifest, plan)
-                    metrics.written_bytes = plan.written_bytes
-                else:
-                    metrics.written_bytes = metrics.total_bytes
-                self._commit(manifest, tmp, step, quantized_keys, metrics,
-                             t_start, rank=rank)
+                with trace.span("save", nbytes=metrics.total_bytes,
+                                attrs={"step": step, "mode": metrics.mode}):
+                    self._run_streaming_flush(step, puts, rank, num_ranks,
+                                              rank_totals, metrics, t_start,
+                                              quantized_keys, tmp, pipeline,
+                                              staged)
             finally:
                 staged.set()   # never leave wait_snapshotted() hanging
 
         if self.async_save:
-            metrics.blocking_seconds = time.perf_counter() - t_start
+            metrics.blocking_seconds = trace.clock() - t_start
             self._flush_error = None
             self._snapshot_staged = staged
             th = threading.Thread(target=self._guard(run), daemon=True,
@@ -565,6 +544,40 @@ class CheckpointManager:
             run()
             metrics.blocking_seconds = metrics.end_to_end_seconds
 
+    def _run_streaming_flush(self, step, puts, rank, num_ranks, rank_totals,
+                             metrics, t_start, quantized_keys, tmp, pipeline,
+                             staged) -> None:
+        run_puts, plan = puts, None
+        totals = rank_totals
+        if self.delta:
+            # fingerprint + diff on the worker: zero blocking cost
+            plan = delta_mod.plan_delta(
+                puts, self._load_delta_index(),
+                chunk_bytes=self.delta_chunk_bytes,
+                checksum=self.config.checksum,
+                device_fingerprint=self.device_fingerprint)
+            metrics.fingerprint_seconds = plan.fingerprint_seconds
+            metrics.diff_seconds = plan.diff_seconds
+            metrics.d2h_bytes = plan.d2h_bytes
+            metrics.chunks_total = plan.chunks_total
+            metrics.chunks_dirty = plan.chunks_dirty
+            run_puts = plan.puts
+            totals = self._single_file_totals(run_puts, rank, num_ranks)
+        t1 = trace.clock()
+        manifest = pipeline.run(tmp, run_puts, step=step, rank=rank,
+                                num_ranks=num_ranks, rank_totals=totals,
+                                on_staged=staged.set)
+        metrics.flush_seconds = trace.clock() - t1
+        st = self.engine.last_save_stats
+        metrics.d2h_seconds = st.copy_seconds + st.alloc_seconds
+        if plan is not None:
+            manifest = delta_mod.apply_plan(manifest, plan)
+            metrics.written_bytes = plan.written_bytes
+        else:
+            metrics.written_bytes = metrics.total_bytes
+        self._commit(manifest, tmp, step, quantized_keys, metrics,
+                     t_start, rank=rank)
+
     def _save_legacy(self, step, tensors, lean_blob, rank, num_ranks,
                      metrics, t_start) -> None:
         """Monolithic save: full host copy (and quant-packing) inline on the
@@ -572,7 +585,7 @@ class CheckpointManager:
         Kept for A/B benchmarking against the pipelined path."""
         # Stage 2: device→host. Shards owned by this process; DP replicas
         # deduplicated by replica_id == 0.
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         items: list[SaveItem] = []
         quantized_keys: list[str] = []
         for key, t in tensors.items():
@@ -593,7 +606,7 @@ class CheckpointManager:
                                       str(data.dtype), tuple(t.shape), index,
                                       record_key=key))
         items.append(SaveItem(LEAN_KEY, lean_blob, is_blob=True))
-        metrics.d2h_seconds = time.perf_counter() - t0
+        metrics.d2h_seconds = trace.clock() - t0
         metrics.total_bytes = sum(it.nbytes for it in items)
         metrics.written_bytes = metrics.total_bytes
 
@@ -607,16 +620,21 @@ class CheckpointManager:
         tmp = self._make_tmp(step)
 
         def flush():
-            t1 = time.perf_counter()
-            manifest = self.engine.save(tmp, items, step=step, rank=rank,
-                                        num_ranks=num_ranks,
-                                        rank_totals=rank_totals)
-            metrics.flush_seconds = time.perf_counter() - t1
-            self._commit(manifest, tmp, step, quantized_keys, metrics,
-                         t_start, rank=rank)
+            with trace.span("save", nbytes=metrics.total_bytes,
+                            attrs={"step": step, "mode": metrics.mode}):
+                t1 = trace.clock()
+                with trace.span("flush", tier="level0",
+                                nbytes=metrics.total_bytes):
+                    manifest = self.engine.save(tmp, items, step=step,
+                                                rank=rank,
+                                                num_ranks=num_ranks,
+                                                rank_totals=rank_totals)
+                metrics.flush_seconds = trace.clock() - t1
+                self._commit(manifest, tmp, step, quantized_keys, metrics,
+                             t_start, rank=rank)
 
         if self.async_save:
-            metrics.blocking_seconds = time.perf_counter() - t_start
+            metrics.blocking_seconds = trace.clock() - t_start
             self._flush_error = None
             th = threading.Thread(target=self._guard(flush), daemon=True,
                                   name=f"ckpt-flush-{step}")
@@ -633,31 +651,33 @@ class CheckpointManager:
         Under a multi-writer ``coordinator`` this becomes phase 1 + the
         rank-0 phase 2 of the two-phase commit (DESIGN.md §11); the step dir
         is renamed exactly once, by rank 0."""
-        t2 = time.perf_counter()
-        manifest.extra["save_metrics"] = {
-            "total_bytes": metrics.total_bytes,
-            "written_bytes": metrics.written_bytes,
-            "flush_seconds": metrics.flush_seconds,
-        }
-        if quantized_keys:
-            manifest.extra["quantized"] = quantized_keys
-        if self.coordinator is not None:
-            self.coordinator.commit(self, manifest, tmp, step, rank)
-        else:
-            saved = False
-            if self.delta:
-                # relocate fresh chunk/blob files into the shared store and
-                # rewrite the manifest's references BEFORE it is written —
-                # a published manifest never points into a GC-able step dir
-                saved = delta_mod.publish_packs(manifest, tmp,
-                                                self.directory,
-                                                step_dir_name(step))
-            if not saved:
-                manifest.save(tmp)
-            self._publish(tmp, step)
-            self._gc_old()
-        metrics.commit_seconds = time.perf_counter() - t2
-        metrics.end_to_end_seconds = time.perf_counter() - t_start
+        t2 = trace.clock()
+        with trace.span("commit", tier="level0", attrs={"step": step}):
+            manifest.extra["save_metrics"] = {
+                "total_bytes": metrics.total_bytes,
+                "written_bytes": metrics.written_bytes,
+                "flush_seconds": metrics.flush_seconds,
+            }
+            if quantized_keys:
+                manifest.extra["quantized"] = quantized_keys
+            if self.coordinator is not None:
+                self.coordinator.commit(self, manifest, tmp, step, rank)
+            else:
+                saved = False
+                if self.delta:
+                    # relocate fresh chunk/blob files into the shared store
+                    # and rewrite the manifest's references BEFORE it is
+                    # written — a published manifest never points into a
+                    # GC-able step dir
+                    saved = delta_mod.publish_packs(manifest, tmp,
+                                                    self.directory,
+                                                    step_dir_name(step))
+                if not saved:
+                    manifest.save(tmp)
+                self._publish(tmp, step)
+                self._gc_old()
+        metrics.commit_seconds = trace.clock() - t2
+        metrics.end_to_end_seconds = trace.clock() - t_start
 
     def _publish(self, tmp: str, step: int) -> None:
         """Atomically swap ``tmp`` in as the step dir (``replace_dir``;
@@ -733,7 +753,7 @@ class CheckpointManager:
         raise last_err
 
     def _restore_step(self, step: int, state_template, shardings, window_fn):
-        t_start = time.perf_counter()
+        t_start = trace.clock()
         ckpt = os.path.join(self.directory, step_dir_name(step))
         prefetch = None
         if self.prefetcher is not None and not Manifest.exists(ckpt):
@@ -752,6 +772,13 @@ class CheckpointManager:
 
     def _restore_from(self, ckpt: str, step: int, state_template, shardings,
                       prefetch, t_start: float, window_fn=None):
+        with trace.span("restore", attrs={"step": step}):
+            return self._restore_from_traced(ckpt, step, state_template,
+                                             shardings, prefetch, t_start,
+                                             window_fn)
+
+    def _restore_from_traced(self, ckpt, step, state_template, shardings,
+                             prefetch, t_start, window_fn=None):
         manifest = Manifest.load(ckpt)
         faults.check_quarantined(ckpt, manifest)
         metrics = RestoreMetrics(
@@ -795,7 +822,7 @@ class CheckpointManager:
             # partial (resharded) one stays staged and is discarded
             prefetch.finish(ckpt, os.path.join(self.directory,
                                                step_dir_name(step)))
-        metrics.end_to_end_seconds = time.perf_counter() - t_start
+        metrics.end_to_end_seconds = trace.clock() - t_start
         self.last_restore_metrics = metrics
         state = reinsert_tensors(lean_tree, out_tensors)
         return state
@@ -828,9 +855,9 @@ class CheckpointManager:
         on_reqs = None
         if prefetch is not None:   # pull exactly the planned extents
             def on_reqs(reqs):
-                t0 = time.perf_counter()
+                t0 = trace.clock()
                 prefetch.fetch_extents(ckpt, reqs)
-                metrics.prefetch_seconds = time.perf_counter() - t0
+                metrics.prefetch_seconds = trace.clock() - t0
         return RestorePipeline(self.engine).run(
             ckpt, tasks, crcs=crcs, place=self._place, on_reqs=on_reqs,
             metrics=metrics)
@@ -850,7 +877,7 @@ class CheckpointManager:
         """Legacy restore: every extent materialized in host memory (peak =
         full checkpoint), then verify → assemble → H2D serially. Kept as
         ``streaming=False`` for A/B benchmarking."""
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         extent_reqs: dict[tuple[str, str, int], ReadReq] = {}
         chunked: dict[tuple[str, str, int], object] = {}  # delta entries
         for key, windows in wanted.items():
@@ -874,12 +901,12 @@ class CheckpointManager:
                         ReadReq(f"{key}@{sh.path}@{sh.offset}", sh.path,
                                 sh.offset, sh.nbytes, obj=key))
         if prefetch is not None:   # pull exactly the planned extents
-            tp = time.perf_counter()
+            tp = trace.clock()
             prefetch.fetch_extents(ckpt, list(extent_reqs.values()))
-            metrics.prefetch_seconds = time.perf_counter() - tp
-            t0 = time.perf_counter()
+            metrics.prefetch_seconds = trace.clock() - tp
+            t0 = trace.clock()
         raw = self.engine.read(ckpt, list(extent_reqs.values()))
-        metrics.read_seconds = time.perf_counter() - t0
+        metrics.read_seconds = trace.clock() - t0
         metrics.read_stall_seconds = metrics.read_seconds
         metrics.peak_staged_bytes = sum(
             req.nbytes for req in extent_reqs.values())
@@ -894,14 +921,14 @@ class CheckpointManager:
             self._verify_extents(manifest, extent_bytes)
 
         # assemble + device placement
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         out_tensors: dict[str, object] = {}
         for stub in iter_stubs(lean_tree):
             rec = _deduped(manifest.tensors[stub.key])
             out_tensors[stub.key] = self._materialize(
                 rec, wanted[stub.key], extent_bytes, metrics,
                 quantized=stub.key in qset)
-        metrics.assemble_seconds = (time.perf_counter() - t0
+        metrics.assemble_seconds = (trace.clock() - t0
                                     - metrics.h2d_seconds
                                     - metrics.decode_seconds)
         return out_tensors
@@ -986,9 +1013,9 @@ class CheckpointManager:
             def lookup(sh):
                 k = (rec.key, sh.path, sh.offset)
                 if k not in cache:
-                    td = time.perf_counter()
+                    td = trace.clock()
                     cache[k] = quant_codec.unpack(extent_bytes[k], dt)
-                    metrics.decode_seconds += time.perf_counter() - td
+                    metrics.decode_seconds += trace.clock() - td
                 return cache[k]
         else:
             lookup = lambda sh: extent_bytes[(rec.key, sh.path, sh.offset)]
@@ -998,7 +1025,7 @@ class CheckpointManager:
         sharding = windows[0][1][0]
         per_device = {}
         arrays = []
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         for window, (shd, dev) in windows:
             wkey = tuple(window)
             if wkey not in per_device:
@@ -1007,7 +1034,7 @@ class CheckpointManager:
         global_shape = tuple(rec.global_shape)
         out = jax.make_array_from_single_device_arrays(
             global_shape, sharding, arrays)
-        metrics.h2d_seconds += time.perf_counter() - t0
+        metrics.h2d_seconds += trace.clock() - t0
         return out
 
     def _check_crc(self, expect, raw, key, path: str = "",

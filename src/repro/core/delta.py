@@ -53,7 +53,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from . import faults
+from . import faults, trace
 from .engines import SaveSpec
 from .engines.base import as_u8
 from .manifest import (CHUNK_KIND, DIGEST_BLAKE2B, DIGEST_FP128, ChunkRef,
@@ -266,8 +266,9 @@ def _gather_device(ck: str, flat, pos: int, n: int, isz: int) -> np.ndarray:
     """D2H-copy one dirty span of a device array (the only payload bytes
     of a clean-mostly tensor that ever cross the link)."""
     faults.gather(ck)
-    sl = flat[pos // isz:(pos + n) // isz]
-    return np.asarray(sl).view(np.uint8)
+    with trace.span("gather", tier="device", nbytes=n, attrs={"key": ck}):
+        sl = flat[pos // isz:(pos + n) // isz]
+        return np.asarray(sl).view(np.uint8)
 
 
 def _gather_quant_device(ck: str, job: _FpJob, pos: int, n: int
@@ -345,7 +346,7 @@ def plan_delta(puts: list[PendingPut], index: DeltaIndex, *,
     if device_fingerprint:
         return _plan_delta_fp128(puts, index, chunk_bytes=chunk_bytes)
     plan = DeltaPlan()
-    t0 = time.perf_counter()
+    t0 = trace.clock()
     for p in puts:
         if p.spec.is_blob:
             plan.puts.append(p)
@@ -381,7 +382,9 @@ def plan_delta(puts: list[PendingPut], index: DeltaIndex, *,
             plan.chunks_dirty += 1
             plan.dirty_bytes += n
         plan.shards.append(_ShardChunks(p.spec, refs, crc))
-    plan.fingerprint_seconds = time.perf_counter() - t0
+    plan.fingerprint_seconds = trace.clock() - t0
+    trace.complete("fingerprint", t0, nbytes=plan.total_bytes,
+                   attrs={"chunks": plan.chunks_total})
     return plan
 
 
@@ -405,7 +408,7 @@ def _plan_delta_fp128(puts: list[PendingPut], index: DeltaIndex, *,
     from . import quant_codec
     plan = DeltaPlan(digest_kind=DIGEST_FP128)
     hb = quant_codec.HEADER.size
-    t0 = time.perf_counter()
+    t0 = trace.clock()
     jobs: list[_FpJob | None] = []
     pool = _host_fp_pool()
     for p in puts:
@@ -460,9 +463,11 @@ def _plan_delta_fp128(puts: list[PendingPut], index: DeltaIndex, *,
         if job is not None and job.future is not None:
             job.digests = job.future.result()
             job.future = None
-    plan.fingerprint_seconds = time.perf_counter() - t0
+    plan.fingerprint_seconds = trace.clock() - t0
+    trace.complete("fingerprint", t0, tier="device",
+                   attrs={"puts": len(puts)})
 
-    t1 = time.perf_counter()
+    t1 = trace.clock()
     for p, job in zip(puts, jobs):
         if job is None:                               # blob passthrough
             plan.puts.append(p)
@@ -505,7 +510,10 @@ def _plan_delta_fp128(puts: list[PendingPut], index: DeltaIndex, *,
             plan.chunks_dirty += 1
             plan.dirty_bytes += n
         plan.shards.append(_ShardChunks(p.spec, refs, None))
-    plan.diff_seconds = time.perf_counter() - t1
+    plan.diff_seconds = trace.clock() - t1
+    trace.complete("diff", t1, nbytes=plan.dirty_bytes,
+                   attrs={"dirty": plan.chunks_dirty,
+                          "total": plan.chunks_total})
     return plan
 
 
@@ -770,6 +778,7 @@ def gc_store(root: str, *, grace_s: float = GC_GRACE_S) -> StoreGCStats:
         # next GC converges) rather than risk reaping a live chunk
         stats.scanned = stats.kept = len(candidates)
         return stats
+    # crlint: allow(CRL006): GC grace compares against file mtimes
     now = time.time()
     for fp in candidates:
         rel = posixpath.normpath(os.path.relpath(fp, store))

@@ -32,12 +32,12 @@ degenerate client that gets every request and drains):
 
 from __future__ import annotations
 
-import time
 import zlib
 from collections import deque
 
 import numpy as np
 
+from .. import trace
 from ..aggregation import Extent, coalesce
 from ..buffers import BufferPool, StageBudget, align_up
 from ..io_engine import IORequest, OP_READ, OP_WRITE
@@ -76,7 +76,7 @@ class _AggSaveStream(SaveStream):
         self.step, self.num_ranks = step, num_ranks
         self.specs = list(specs)
         self.stats = IOStats()
-        self.t0 = time.perf_counter()
+        self.t0 = trace.clock()
         self.plan = eng._plan(self.specs, rank, rank_totals)
         self.extents = {e.key: e for e in self.plan.extents}
         regions = None
@@ -135,8 +135,10 @@ class _AggSaveStream(SaveStream):
         group buffer per interleaved group above the budget — open group
         buffers are only reclaimable by completing their groups."""
         need = BufferPool.size_class(max(span, 1))
-        while not self.budget.admits(need) and self._inflight:
-            self._reap(1)
+        if not self.budget.admits(need) and self._inflight:
+            with trace.span("budget.wait", nbytes=need):
+                while not self.budget.admits(need) and self._inflight:
+                    self._reap(1)
         buf = self.eng.pool.get(span)
         self.budget.add(buf.nbytes)
         return buf
@@ -173,11 +175,11 @@ class _AggSaveStream(SaveStream):
             p = 0
             while p < mv.nbytes:
                 n = min(self._chunk, mv.nbytes - p)
-                ta = time.perf_counter()
+                ta = trace.clock()
                 buf = self._acquire(align_up(n, cfg.align))
-                tb = time.perf_counter()
+                tb = trace.clock()
                 buf.view(0, n)[:] = mv[p:p + n]
-                tc = time.perf_counter()
+                tc = trace.clock()
                 self.stats.alloc_seconds += tb - ta
                 self.stats.copy_seconds += tc - tb
                 self._submit(self.fds[e.path], e.offset + pos + p, buf,
@@ -195,13 +197,13 @@ class _AggSaveStream(SaveStream):
         first, last = g.extents[0], g.extents[-1]
         span = last.offset + align_up(last.nbytes, cfg.align) - first.offset
         if g.buf is None:
-            ta = time.perf_counter()
+            ta = trace.clock()
             g.buf = self._acquire(span)
-            self.stats.alloc_seconds += time.perf_counter() - ta
+            self.stats.alloc_seconds += trace.clock() - ta
         if mv.nbytes:
-            tb = time.perf_counter()
+            tb = trace.clock()
             g.buf.view(e.offset - first.offset, e.nbytes)[:] = mv
-            self.stats.copy_seconds += time.perf_counter() - tb
+            self.stats.copy_seconds += trace.clock() - tb
         g.filled += e.nbytes
         g.seen += 1
         if g.seen == len(g.extents) and not g.submitted:
@@ -220,19 +222,21 @@ class _AggSaveStream(SaveStream):
             self.abort()
             raise RuntimeError(f"end_save with unfilled objects: {missing[:5]}")
         try:
-            while self.io.inflight:
-                self._reap(1)
-            self._reap(0)   # drain engines that complete inline (posix)
-            t_io0 = time.perf_counter()
-            self.eng._fsync_all(self.io, self.fds)
-            self.stats.io_seconds += time.perf_counter() - t_io0
+            with trace.span("flush", tier="level0",
+                            nbytes=self.plan.total_logical_bytes):
+                while self.io.inflight:
+                    self._reap(1)
+                self._reap(0)   # drain engines that complete inline (posix)
+                t_io0 = trace.clock()
+                self.eng._fsync_all(self.io, self.fds)
+                self.stats.io_seconds += trace.clock() - t_io0
         finally:
             self._state = "ended"
             self.io.close()
             self.eng._close_files(self.fds)
         self.stats.logical_bytes = self.plan.total_logical_bytes
         self.stats.peak_staged_bytes = self.budget.peak
-        self.stats.seconds = time.perf_counter() - self.t0
+        self.stats.seconds = trace.clock() - self.t0
         self.eng.last_save_stats = self.stats
         return self.eng._manifest_from(self.specs, self.plan, step=self.step,
                                        num_ranks=self.num_ranks,
@@ -296,7 +300,7 @@ class _AggReadStream(ReadStream):
         self.eng = eng
         self.cfg = cfg = eng.config
         self.stats = IOStats()
-        self.t0 = time.perf_counter()
+        self.t0 = trace.clock()
         self.extents: dict[str, Extent] = {}
         for r in reqs:
             if r.key in self.extents:
@@ -381,9 +385,9 @@ class _AggReadStream(ReadStream):
             self._submit(unit)
 
     def _submit(self, unit: _ReadUnit) -> None:
-        ta = time.perf_counter()
+        ta = trace.clock()
         buf = self.eng.pool.get(unit.span)
-        self.stats.alloc_seconds += time.perf_counter() - ta
+        self.stats.alloc_seconds += trace.clock() - ta
         self.budget.add(buf.nbytes)
         self._token += 1
         self._handlers[self._token] = (buf, unit)
@@ -407,7 +411,7 @@ class _AggReadStream(ReadStream):
 
     def _complete(self, c) -> None:
         buf, unit = self._handlers.pop(c.user_data)
-        tb = time.perf_counter()
+        tb = trace.clock()
         if unit.group is not None:
             first = unit.group[0]
             landed = 0
@@ -421,7 +425,7 @@ class _AggReadStream(ReadStream):
             self.budget.sub(buf.nbytes)
             buf.release()
             self.budget.add(landed)
-            self.stats.copy_seconds += time.perf_counter() - tb
+            self.stats.copy_seconds += trace.clock() - tb
             for e in unit.group:     # verify AFTER the books are settled
                 self._verify_whole(e)
         else:
@@ -436,7 +440,7 @@ class _AggReadStream(ReadStream):
             self._left[unit.key] -= unit.n
             if self._left[unit.key] == 0:
                 self._done[unit.key] = self._dest.pop(unit.key)
-            self.stats.copy_seconds += time.perf_counter() - tb
+            self.stats.copy_seconds += trace.clock() - tb
             self._advance_crc(e, dest, unit.pos, unit.n)
 
     # ------------------------------------------------------ CRC verification
@@ -472,10 +476,10 @@ class _AggReadStream(ReadStream):
             raise KeyError(f"read request {key!r} already consumed")
         if key not in self.extents:
             raise KeyError(key)
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         while key not in self._done:
             self._pump(wait_for=key)
-        self.stats.io_seconds += time.perf_counter() - t0  # blocked-on-read
+        self.stats.io_seconds += trace.clock() - t0  # blocked-on-read
         arr = self._done.pop(key)
         self._consumed.add(key)
         self.budget.sub(self._staged_done.pop(key, 0))
@@ -494,7 +498,7 @@ class _AggReadStream(ReadStream):
         self.stats.logical_bytes = sum(
             e.nbytes for e in self.extents.values())
         self.stats.peak_staged_bytes = self.budget.peak
-        self.stats.seconds = time.perf_counter() - self.t0
+        self.stats.seconds = trace.clock() - self.t0
         self.eng.last_restore_stats = self.stats
         return self.stats
 

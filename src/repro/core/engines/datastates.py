@@ -20,10 +20,10 @@ else (ring, manifest) is shared, so benchmark gaps isolate the design axes.
 
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
+from .. import trace
 from ..aggregation import Strategy
 from ..buffers import align_up
 from ..io_engine import IORequest, OP_READ, OP_WRITE
@@ -47,7 +47,7 @@ class DataStatesEngine(CREngine):
              rank: int = 0, num_ranks: int = 1,
              rank_totals: list[int] | None = None) -> Manifest:
         cfg = self.config
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         stats = IOStats()
         plan = self._plan(items, rank, rank_totals)
         by_key = {e.key: e for e in plan.extents}
@@ -71,12 +71,12 @@ class DataStatesEngine(CREngine):
                 pos = 0
                 while pos < it.nbytes or (it.nbytes == 0 and pos == 0):
                     n = min(cfg.chunk_bytes, it.nbytes - pos)
-                    ta = time.perf_counter()
+                    ta = trace.clock()
                     buf = self.pool.get(max(n, 1))   # fresh buffer each time
-                    tb = time.perf_counter()
+                    tb = trace.clock()
                     buf.view(0, n)[:] = mv[pos:pos + n]
                     stats.alloc_seconds += tb - ta
-                    stats.copy_seconds += time.perf_counter() - tb
+                    stats.copy_seconds += trace.clock() - tb
                     token += 1
                     inflight[token] = buf
                     io.submit([IORequest(OP_WRITE, fds[e.path], e.offset + pos,
@@ -92,14 +92,14 @@ class DataStatesEngine(CREngine):
             io.close()
             self._close_files(fds)
         stats.logical_bytes = plan.total_logical_bytes
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_save_stats = stats
         return self._manifest_from(items, plan, step=step, num_ranks=num_ranks)
 
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
         """One read per metadata entry; per-read dynamic allocation."""
         cfg = self.config
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         stats = IOStats()
         out: dict[str, np.ndarray] = {}
         fds = self._open_files(ckpt_dir, {r.path for r in reqs}, "r")
@@ -111,19 +111,19 @@ class DataStatesEngine(CREngine):
         def reap(block_min: int):
             for c in io.poll(min_n=block_min):
                 buf, key, nbytes = handlers.pop(c.user_data)
-                tb = time.perf_counter()
+                tb = trace.clock()
                 arr = np.empty(nbytes, dtype=np.uint8)
                 arr[:] = np.frombuffer(buf.view(0, nbytes), np.uint8)
                 out[key] = arr
-                stats.copy_seconds += time.perf_counter() - tb
+                stats.copy_seconds += trace.clock() - tb
                 buf.release()   # pool disabled → munmap'd, next get() realloc
 
         try:
             for r in reqs:
                 # NOTE: one request per manifest entry, even tiny ones
-                ta = time.perf_counter()
+                ta = trace.clock()
                 buf = self.pool.get(max(r.nbytes, 1))
-                stats.alloc_seconds += time.perf_counter() - ta
+                stats.alloc_seconds += trace.clock() - ta
                 token += 1
                 handlers[token] = (buf, r.key, r.nbytes)
                 io.submit([IORequest(OP_READ, fds[r.path], r.offset, buf, 0,
@@ -137,6 +137,6 @@ class DataStatesEngine(CREngine):
             io.close()
             self._close_files(fds)
         stats.logical_bytes = sum(r.nbytes for r in reqs)
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_restore_stats = stats
         return out

@@ -22,11 +22,11 @@ engines package, and the lazy import breaks that cycle.
 from __future__ import annotations
 
 import threading
-import time
 import zlib
 
 import numpy as np
 
+from .. import trace
 from ..buffers import StageBudget
 from .base import ChecksumError, CREngine, IOStats, ReadReq, ReadStream
 
@@ -55,7 +55,7 @@ class RemoteReadEngine(CREngine):
              reqs: list[ReadReq]) -> dict[str, np.ndarray]:
         """Batch read (the lean-blob path): all ranges land before return."""
         from ..remote import _req_ranges
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         bufs = {rq.key: bytearray(rq.nbytes) for rq in reqs}
         tasks = _req_ranges(reqs, self.step_prefix, self.rcfg.range_bytes)
 
@@ -67,7 +67,7 @@ class RemoteReadEngine(CREngine):
         rstats = self.sched.run(tasks, deliver)
         self.last_range_stats = rstats
         self.last_restore_stats = IOStats(
-            seconds=time.perf_counter() - t0,
+            seconds=trace.clock() - t0,
             logical_bytes=rstats.bytes,
             io_requests=rstats.ranges,
             files=len({rq.path for rq in reqs}),
@@ -110,7 +110,7 @@ class _RemoteReadStream(ReadStream):
         self._err: BaseException | None = None
         self._rstats = None
         self._cancel = threading.Event()
-        self._t0 = time.perf_counter()
+        self._t0 = trace.clock()
         tasks = _req_ranges(reqs, engine.step_prefix,
                             engine.rcfg.range_bytes)
         for r in tasks:
@@ -186,7 +186,7 @@ class _RemoteReadStream(ReadStream):
             raise self._err
         rstats = self._rstats
         stats = IOStats(
-            seconds=time.perf_counter() - self._t0,
+            seconds=trace.clock() - self._t0,
             logical_bytes=rstats.bytes,
             io_requests=rstats.ranges,
             files=len({rq.path for rq in self.reqs.values()}),

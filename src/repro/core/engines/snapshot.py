@@ -20,11 +20,10 @@ Modeled faithfully:
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
-from .. import faults
+from .. import faults, trace
 from ..io_engine import IORequest, OP_READ, OP_WRITE
 from ..manifest import Manifest, ShardEntry, BlobRecord
 from ..aggregation import _sanitize
@@ -49,7 +48,7 @@ class SnapshotEngine(CREngine):
              rank: int = 0, num_ranks: int = 1,
              rank_totals: list[int] | None = None) -> Manifest:
         cfg = self.config
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         stats = IOStats()
         io = self._make_io()
         inflight: dict[int, tuple] = {}  # token -> (fd, buf)
@@ -76,12 +75,12 @@ class SnapshotEngine(CREngine):
                     # one file PER CHUNK — opened, written, fsync'd, closed
                     fd = os.open(os.path.join(ckpt_dir, rel),
                                  os.O_CREAT | os.O_WRONLY | os.O_TRUNC, 0o644)
-                    ta = time.perf_counter()
+                    ta = trace.clock()
                     buf = self.pool.get(max(n, 1))
-                    tb = time.perf_counter()
+                    tb = trace.clock()
                     buf.view(0, n)[:] = mv[pos:pos + n]
                     stats.alloc_seconds += tb - ta
-                    stats.copy_seconds += time.perf_counter() - tb
+                    stats.copy_seconds += trace.clock() - tb
                     token += 1
                     inflight[token] = (fd, buf)
                     io.submit([IORequest(OP_WRITE, fd, 0, buf, 0, n,
@@ -106,7 +105,7 @@ class SnapshotEngine(CREngine):
         finally:
             io.close()
         stats.logical_bytes = sum(it.nbytes for it in items)
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_save_stats = stats
         m.extra["engine"] = {"name": self.name, "chunk_bytes": cfg.chunk_bytes,
                              "chunked_dirs": True}
@@ -115,7 +114,7 @@ class SnapshotEngine(CREngine):
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
         """Serial, per-object, chunk-at-a-time restore with dynamic alloc."""
         cfg = self.config
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         stats = IOStats()
         out: dict[str, np.ndarray] = {}
         for r in reqs:  # objects strictly one-after-another
@@ -127,10 +126,10 @@ class SnapshotEngine(CREngine):
                 in_chunk = pos - idx * cfg.chunk_bytes
                 n = min(end - pos, cfg.chunk_bytes - in_chunk)
                 rel = f"{r.path}/{idx:06d}.bin"
-                ta = time.perf_counter()
+                ta = trace.clock()
                 buf = self.pool.get(n)          # fresh allocation per read
                 try:
-                    tb = time.perf_counter()
+                    tb = trace.clock()
                     fd = os.open(os.path.join(ckpt_dir, rel), os.O_RDONLY)
                     total = 0
                     mv = buf.view(0, n)
@@ -143,11 +142,11 @@ class SnapshotEngine(CREngine):
                             total += got
                     finally:
                         os.close(fd)
-                    tc = time.perf_counter()
+                    tc = trace.clock()
                     dest[pos - r.offset:pos - r.offset + n] = np.frombuffer(mv, np.uint8)
                     stats.alloc_seconds += tb - ta
                     stats.io_seconds += tc - tb
-                    stats.copy_seconds += time.perf_counter() - tc
+                    stats.copy_seconds += trace.clock() - tc
                     stats.io_requests += 1
                     stats.files += 1
                 finally:
@@ -155,6 +154,6 @@ class SnapshotEngine(CREngine):
                 pos += n
             out[r.key] = dest
         stats.logical_bytes = sum(r.nbytes for r in reqs)
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_restore_stats = stats
         return out

@@ -15,11 +15,10 @@ from __future__ import annotations
 
 import os
 import pickle
-import time
 
 import numpy as np
 
-from .. import faults
+from .. import faults, trace
 from ..manifest import Manifest, ShardEntry, BlobRecord
 from .base import CREngine, EngineConfig, IOStats, ReadReq, SaveItem, item_mv
 
@@ -42,29 +41,29 @@ class TorchSaveEngine(CREngine):
     def save(self, ckpt_dir: str, items: list[SaveItem], *, step: int = 0,
              rank: int = 0, num_ranks: int = 1,
              rank_totals: list[int] | None = None) -> Manifest:
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         stats = IOStats()
         # Full-object serialization: tensors are materialized & pickled.
-        tc0 = time.perf_counter()
+        tc0 = trace.clock()
         obj = {it.key: (bytes(item_mv(it)), it.dtype, it.global_shape,
                         it.index, it.is_blob) for it in items}
         payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-        stats.copy_seconds = time.perf_counter() - tc0
+        stats.copy_seconds = trace.clock() - tc0
 
         rel = self._path(rank)
         full = os.path.join(ckpt_dir, rel)
         os.makedirs(os.path.dirname(full), exist_ok=True)
-        ti0 = time.perf_counter()
+        ti0 = trace.clock()
         with open(full, "wb") as f:
             f.write(payload)
             f.flush()
             if self.config.fsync_on_save:
                 faults.fsync(f.fileno())
-        stats.io_seconds = time.perf_counter() - ti0
+        stats.io_seconds = trace.clock() - ti0
         stats.io_requests = 1
         stats.files = 1
         stats.logical_bytes = sum(it.nbytes for it in items)
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_save_stats = stats
 
         m = Manifest(step=step, num_ranks=num_ranks, strategy="torchsave")
@@ -84,23 +83,23 @@ class TorchSaveEngine(CREngine):
         return m
 
     def read(self, ckpt_dir: str, reqs: list[ReadReq]) -> dict[str, np.ndarray]:
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         stats = IOStats()
         out: dict[str, np.ndarray] = {}
         for path in {r.path.partition("::")[0] for r in reqs}:
             full = os.path.join(ckpt_dir, path)
             if full not in self._cache:
-                ti0 = time.perf_counter()
+                ti0 = trace.clock()
                 with open(full, "rb") as f:
                     payload = f.read()       # opaque: reads EVERYTHING
-                stats.io_seconds += time.perf_counter() - ti0
+                stats.io_seconds += trace.clock() - ti0
                 stats.io_requests += 1
-                tc0 = time.perf_counter()
+                tc0 = trace.clock()
                 obj = pickle.loads(payload)
                 self._cache[full] = {
                     k: np.frombuffer(v[0], dtype=np.uint8).copy()
                     for k, v in obj.items()}
-                stats.copy_seconds += time.perf_counter() - tc0
+                stats.copy_seconds += trace.clock() - tc0
             stats.files += 1
         for r in reqs:
             file_rel, _, item_key = r.path.partition("::")
@@ -108,7 +107,7 @@ class TorchSaveEngine(CREngine):
                 item_key or r.obj or r.key]
             out[r.key] = arr[:r.nbytes] if r.nbytes < arr.nbytes else arr
         stats.logical_bytes = sum(r.nbytes for r in reqs)
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_restore_stats = stats
         self._cache.clear()
         return out

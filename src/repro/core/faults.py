@@ -44,6 +44,8 @@ import zlib
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
+from . import trace
+
 from .manifest import ManifestError
 
 # syscall kinds an instrumented site reports
@@ -177,6 +179,10 @@ class FaultPlan:
                 if f.seen >= f.at:
                     f.done = True
                     self.fired.append(f.describe())
+                    trace.event("fault.injected", tier="faults",
+                                attrs={"op": op, "action": f.action,
+                                       "path": path or "",
+                                       "fault": f.describe()})
                     return f
             return None
 
@@ -420,6 +426,7 @@ def simulate_owner_death(root: str, *, backdate_s: float = 3600.0) -> int:
     Returns the number of dirs marked."""
     import socket
     dead_pid = 2 ** 30 + 7    # beyond pid_max everywhere we run
+    # crlint: allow(CRL006): backdating an mtime needs the wall clock
     then = time.time() - backdate_s
     marked = 0
     try:

@@ -21,7 +21,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 
-from . import faults
+from . import faults, trace
 from .buffers import AlignedBuffer, PAGE, align_up
 from .uring import IoUring, probe_io_uring
 
@@ -94,6 +94,9 @@ class IOEngine:
         # raising from poll() — required by callers that hedge requests and
         # must tolerate one attempt failing while another succeeds
         self.capture_errors = False
+        # trace track for this engine's submit→completion spans; owners
+        # re-tag per role (tiered flush engines are "level1", remote "remote")
+        self.tier = "level0"
 
     # --- async primitives (overridden) ---
     def submit(self, reqs: list[IORequest]) -> None:
@@ -128,10 +131,11 @@ class IOEngine:
         return out
 
     def fsync(self, fd: int, datasync: bool = True) -> None:
-        if datasync:
-            faults.fdatasync(fd)
-        else:
-            faults.fsync(fd)
+        with trace.span("io.fsync", tier=self.tier):
+            if datasync:
+                faults.fdatasync(fd)
+            else:
+                faults.fsync(fd)
 
     def close(self) -> None:
         pass
@@ -153,6 +157,7 @@ class UringEngine(IOEngine):
         super().__init__()
         self.ring = IoUring(entries=entries, sqpoll=sqpoll)
         self._pending: dict[int, IORequest] = {}
+        self._t_submit: dict[int, float] = {}   # token -> clock() at submit
         self._backlog: list[Completion] = []
         self._next_token = 0
         self._fixed_index: dict[int, int] = {}
@@ -187,9 +192,12 @@ class UringEngine(IOEngine):
             raise ValueError(r.op)
 
     def submit(self, reqs: list[IORequest]) -> None:
+        traced = trace.is_enabled()
         for r in reqs:
             token = self._token()
             self._pending[token] = r
+            if traced:
+                self._t_submit[token] = trace.clock()
             self._prep(r, token)
         if reqs:
             self.ring.submit()
@@ -214,13 +222,13 @@ class UringEngine(IOEngine):
             # timed wait: spin on non-blocking reaps until deadline.
             # min_n was already decremented by any backlog drained above,
             # so count only newly reaped completions against it.
-            deadline = time.perf_counter() + timeout_s
+            deadline = trace.clock() + timeout_s
             got = 0
             while got < min_n:
                 new = self._reap(0)
                 out.extend(new)
                 got += len(new)
-                if got >= min_n or time.perf_counter() >= deadline:
+                if got >= min_n or trace.clock() >= deadline:
                     break
                 time.sleep(0.0005)
             return out
@@ -232,6 +240,10 @@ class UringEngine(IOEngine):
         out: list[Completion] = []
         for c in cqes:
             r = self._pending.pop(c.user_data)
+            t0 = self._t_submit.pop(c.user_data, None)
+            if t0 is not None:   # submit→completion pair on this tier's track
+                trace.complete(f"io.{r.op}", t0, tier=self.tier,
+                               nbytes=r.nbytes)
             if c.res < 0:
                 err = OSError(-c.res,
                               f"{r.op} failed: {os.strerror(-c.res)} "
@@ -256,6 +268,8 @@ class UringEngine(IOEngine):
     def fsync(self, fd: int, datasync: bool = True) -> None:
         token = self._token()
         self._pending[token] = IORequest(OP_FSYNC, fd, user_data=token)
+        if trace.is_enabled():
+            self._t_submit[token] = trace.clock()
         self.ring.prep_fsync(fd, user_data=token, datasync=datasync)
         self.ring.submit()
         self.stats.submissions += 1
@@ -307,10 +321,16 @@ class ThreadPoolEngine(IOEngine):
             return 0
         raise ValueError(r.op)
 
+    def _do_traced(self, r: IORequest) -> int:
+        # runs on the io worker thread: the span lands in that thread's
+        # ring, so worker-side I/O visibly overlaps the submitter's stages
+        with trace.span(f"io.{r.op}", tier=self.tier, nbytes=r.nbytes):
+            return self._do(r)
+
     def submit(self, reqs: list[IORequest]) -> None:
         with self._lock:
             for r in reqs:
-                self._futs[self.pool.submit(self._do, r)] = r
+                self._futs[self.pool.submit(self._do_traced, r)] = r
             self.stats.submissions += 1
             self.stats.max_inflight = max(self.stats.max_inflight,
                                           len(self._futs))
@@ -363,7 +383,9 @@ class PosixEngine(IOEngine):
         for r in reqs:
             self.stats.submissions += 1
             try:
-                n = ThreadPoolEngine._do(r)  # same loop, executed inline
+                with trace.span(f"io.{r.op}", tier=self.tier,
+                                nbytes=r.nbytes):
+                    n = ThreadPoolEngine._do(r)  # same loop, executed inline
             except BaseException as e:
                 if self.capture_errors:
                     self._done.append(Completion(r.user_data, 0, e))

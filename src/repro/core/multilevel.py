@@ -36,7 +36,7 @@ from concurrent.futures import ThreadPoolExecutor, wait, FIRST_COMPLETED
 from dataclasses import dataclass, field
 
 from . import delta as delta_mod
-from . import faults
+from . import faults, trace
 from .checkpoint import CheckpointManager, replace_dir, step_dir_name
 from .manifest import Manifest, ManifestError
 from .tiered import RestorePrefetcher, TieredTransferEngine
@@ -129,8 +129,13 @@ class MultiLevelCheckpointer:
 
     def flush_to_remote(self, step: int) -> FlushStats:
         """Copy a committed local step dir to the remote level, hedged."""
+        with trace.span("flush.level1", tier="level1",
+                        attrs={"step": step}):
+            return self._flush_to_remote_traced(step)
+
+    def _flush_to_remote_traced(self, step: int) -> FlushStats:
         stats = FlushStats()
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         src_dir = os.path.join(self.local.directory, step_dir_name(step))
         dst_tmp = os.path.join(self.remote_dir,
                                f"{step_dir_name(step)}.tmp-flush")
@@ -169,6 +174,7 @@ class MultiLevelCheckpointer:
             # flusher's live tmp is left alone
             for stale in glob.glob(f"{remote}.tmp-flush-*"):
                 try:
+                    # crlint: allow(CRL006): mtime age check is wall-clock
                     if time.time() - os.path.getmtime(stale) > 300.0:
                         os.remove(stale)
                 except OSError:
@@ -221,7 +227,7 @@ class MultiLevelCheckpointer:
         # remote step never leaves a window where the previous copy is gone
         # before the new one landed
         replace_dir(dst_tmp, dst_fin)
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         if stats.seconds:
             stats.read_gbps = (stats.per_tier.get("source", {})
                                .get("bytes_read", 0) / stats.seconds / 1e9)

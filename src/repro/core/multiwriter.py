@@ -37,14 +37,13 @@ from __future__ import annotations
 
 import os
 import threading
-import time
 import uuid
 from dataclasses import dataclass, field, replace
 
 import jax
 import numpy as np
 
-from . import faults
+from . import faults, trace
 from .aggregation import partition_spans
 from .checkpoint import CheckpointManager, step_dir_name, write_owner
 from .engines import EngineConfig
@@ -88,7 +87,9 @@ class InProcessGroup:
 
     def barrier(self) -> None:
         try:
-            self._barrier.wait()
+            with trace.span("barrier", tier="commit",
+                            attrs={"ranks": self.num_ranks}):
+                self._barrier.wait()
         except threading.BrokenBarrierError:
             raise MultiWriterAborted(
                 "a peer writer rank failed before the barrier") from None
@@ -161,33 +162,15 @@ class CommitCoordinator:
 
     def commit(self, mgr: CheckpointManager, manifest: Manifest, tmp: str,
                step: int, rank: int) -> None:
-        manifest.save_rank(tmp, rank)
-        self.group.barrier()             # phase 1: all ranks durable
+        with trace.span("commit.phase1", tier="commit",
+                        attrs={"rank": rank, "step": step}):
+            manifest.save_rank(tmp, rank)
+            self.group.barrier()         # phase 1: all ranks durable
         if rank == 0:
             try:
-                merged = Manifest.load_rank(tmp, 0)
-                for r in range(1, self.group.num_ranks):
-                    merged.merge(Manifest.load_rank(tmp, r), rank=r)
-                merged.num_ranks = self.group.num_ranks
-                saved = False
-                if mgr.delta:
-                    # delta saves (§12): every rank's manifest described its
-                    # fresh chunks with step-dir-relative paths; rank 0
-                    # relocates the shared data files into the chunkstore
-                    # and rewrites the MERGED manifest exactly once, before
-                    # the only publish
-                    from .delta import publish_packs
-                    saved = publish_packs(merged, tmp, mgr.directory,
-                                          step_dir_name(step))
-                if not saved:
-                    merged.save(tmp)
-                mgr._publish(tmp, step)
-                mgr._gc_old()
-                self._err = None
-                # drop the staging entry only on success — on failure it
-                # stays registered so _save_all's discard() can reclaim it
-                with self._lock:
-                    self._tmp.pop(step, None)
+                with trace.span("commit.merge", tier="commit",
+                                attrs={"step": step}):
+                    self._merge_publish(mgr, tmp, step)
             except BaseException as e:
                 self._err = e
         self.group.barrier()             # phase 2: publish visible to all
@@ -195,6 +178,31 @@ class CommitCoordinator:
             if rank == 0:
                 raise self._err
             raise MultiWriterAborted("rank-0 commit failed") from self._err
+
+    def _merge_publish(self, mgr: CheckpointManager, tmp: str,
+                       step: int) -> None:
+        merged = Manifest.load_rank(tmp, 0)
+        for r in range(1, self.group.num_ranks):
+            merged.merge(Manifest.load_rank(tmp, r), rank=r)
+        merged.num_ranks = self.group.num_ranks
+        saved = False
+        if mgr.delta:
+            # delta saves (§12): every rank's manifest described its fresh
+            # chunks with step-dir-relative paths; rank 0 relocates the
+            # shared data files into the chunkstore and rewrites the MERGED
+            # manifest exactly once, before the only publish
+            from .delta import publish_packs
+            saved = publish_packs(merged, tmp, mgr.directory,
+                                  step_dir_name(step))
+        if not saved:
+            merged.save(tmp)
+        mgr._publish(tmp, step)
+        mgr._gc_old()
+        self._err = None
+        # drop the staging entry only on success — on failure it stays
+        # registered so _save_all's discard() can reclaim it
+        with self._lock:
+            self._tmp.pop(step, None)
 
 
 @dataclass
@@ -310,7 +318,7 @@ class MultiWriterCheckpointer:
         happens on the blocking path; with ``async_save`` the N rank flushes
         and the two-phase commit then drain on a driver thread."""
         self.wait()
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         shards = shard_state(state, self.num_ranks,
                              snapshot=self.async_save)
         metrics = MultiSaveMetrics(
@@ -318,7 +326,7 @@ class MultiWriterCheckpointer:
             mode="async" if self.async_save else "blocking")
         self.last_save_metrics = metrics
         if self.async_save:
-            metrics.blocking_seconds = time.perf_counter() - t0
+            metrics.blocking_seconds = trace.clock() - t0
             self._error = None
             th = threading.Thread(
                 target=self._run_guarded, args=(step, shards, metrics, t0),
@@ -358,7 +366,7 @@ class MultiWriterCheckpointer:
                 f"multi-writer save of step {step} failed") from primary
         metrics.per_rank = [m for m in outs]
         metrics.total_bytes = sum(m.total_bytes for m in outs)
-        metrics.end_to_end_seconds = time.perf_counter() - t0
+        metrics.end_to_end_seconds = trace.clock() - t0
 
     def wait_snapshotted(self) -> None:
         """No-op barrier: ``save`` partitions (async: deep-copies) every

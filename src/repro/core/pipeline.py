@@ -40,7 +40,6 @@ staging stays bounded by ``EngineConfig.inflight_bytes``.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from types import SimpleNamespace
 from typing import Callable
@@ -48,6 +47,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from . import trace
 from .engines import ChecksumError, ReadReq, SaveSpec
 from .manifest import CHUNK_KIND, Manifest, TensorRecord, crc32_of
 from .resharding import WindowAssembler, normalize_index, record_dtype
@@ -156,12 +156,17 @@ class SnapshotPipeline:
         from then on the save no longer reads any caller-owned memory, so
         callers may mutate or donate their arrays while the flush drains
         (CheckpointManager.wait_snapshotted)."""
-        stream = self.engine.begin_save(
-            ckpt_dir, [p.spec for p in puts], step=step, rank=rank,
-            num_ranks=num_ranks, rank_totals=rank_totals)
+        with trace.span("plan", nbytes=sum(p.spec.nbytes for p in puts)):
+            stream = self.engine.begin_save(
+                ckpt_dir, [p.spec for p in puts], step=step, rank=rank,
+                num_ranks=num_ranks, rank_totals=rank_totals)
         try:
             for p in puts:
-                stream.put(p.spec.key, p.resolve())
+                # the resolve IS the snapshot: D2H view + quant pack
+                with trace.span("snapshot", nbytes=p.spec.nbytes,
+                                attrs={"key": p.spec.key}):
+                    payload = p.resolve()
+                stream.put(p.spec.key, payload)
             if on_staged is not None:
                 on_staged()
             return stream.end_save()
@@ -272,7 +277,7 @@ class RestorePipeline:
         try:
             for task, asms, ordered in plans:
                 for sh in ordered:
-                    t0 = time.perf_counter()
+                    t0 = trace.clock()
                     if sh.kind == CHUNK_KIND:
                         # reassemble the shard payload from its chunk refs
                         # as they land; per-chunk CRCs were verified inside
@@ -292,22 +297,28 @@ class RestorePipeline:
                     else:
                         raw = stream.get(
                             _extent_req_key(task.key, sh.path, sh.offset))
-                    t1 = time.perf_counter()
+                    t1 = trace.clock()
                     metrics.read_stall_seconds += t1 - t0
+                    trace.complete("read.stall", t0, t1, nbytes=sh.nbytes)
                     if task.quantized:
                         raw = quant_codec.unpack(raw,
                                                  record_dtype(task.record))
-                        t2 = time.perf_counter()
+                        t2 = trace.clock()
                         metrics.decode_seconds += t2 - t1
+                        trace.complete("decode", t1, t2, nbytes=sh.nbytes)
                     else:
                         t2 = t1
                     for asm in asms.values():
                         asm.feed(sh, raw)
-                    metrics.assemble_seconds += time.perf_counter() - t2
+                    t_asm = trace.clock()
+                    metrics.assemble_seconds += t_asm - t2
+                    trace.complete("assemble", t2, t_asm, nbytes=sh.nbytes)
                 windows = {wkey: asm.result() for wkey, asm in asms.items()}
-                t3 = time.perf_counter()
+                t3 = trace.clock()
                 out[task.key] = place(task, windows)
-                metrics.h2d_seconds += time.perf_counter() - t3
+                t4 = trace.clock()
+                metrics.h2d_seconds += t4 - t3
+                trace.complete("h2d", t3, t4, tier="device")
             stats = stream.end_restore()
             metrics.read_seconds = stats.seconds
             metrics.peak_staged_bytes = stats.peak_staged_bytes

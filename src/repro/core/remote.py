@@ -53,7 +53,7 @@ from dataclasses import dataclass, field
 from queue import Empty, SimpleQueue
 
 from . import delta as delta_mod
-from . import faults
+from . import faults, trace
 from .aggregation import Extent
 from .buffers import PAGE, StageBudget, aligned_span
 from .manifest import MANIFEST_NAME, Manifest
@@ -423,6 +423,8 @@ class RangeScheduler:
             except RemoteTransientError:
                 errors += 1
                 retries += 1
+                trace.event("range.retry", tier="remote",
+                            attrs={"key": r.key, "errors": errors})
                 if errors > self.cfg.max_retries:
                     raise
                 time.sleep(self.cfg.retry_backoff_s * errors)
@@ -444,9 +446,14 @@ class RangeScheduler:
 
     def _issue(self, r: _Range, q: SimpleQueue, hedge: bool) -> None:
         if not hedge:
-            r.issued_at = time.perf_counter()
+            r.issued_at = trace.clock()
             r.deadline = r.issued_at + max(
                 self.cfg.hedge_after_s, r.nbytes / self.cfg.min_bw_bytes_s)
+            trace.event("range.issue", tier="remote", nbytes=r.nbytes,
+                        attrs={"key": r.key})
+        else:
+            trace.event("range.hedge", tier="remote", nbytes=r.nbytes,
+                        attrs={"key": r.key, "attempt": r.attempts})
         idx = r.attempts
         r.attempts += 1
         r.outstanding += 1
@@ -474,7 +481,7 @@ class RangeScheduler:
         pending = deque(tasks)
         active: dict[int, _Range] = {}
         q: SimpleQueue = SimpleQueue()
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         try:
             while pending or active:
                 if cancel is not None and cancel.is_set():
@@ -522,14 +529,21 @@ class RangeScheduler:
                         r.done = True
                         del active[rid]
                         stats.bytes += r.nbytes
-                        stats.range_seconds.append(
-                            time.perf_counter() - r.issued_at)
+                        t_done = trace.clock()
+                        stats.range_seconds.append(t_done - r.issued_at)
+                        trace.complete("remote.get", r.issued_at, t_done,
+                                       tier="remote", nbytes=r.nbytes,
+                                       attrs={"key": r.key,
+                                              "attempts": r.attempts})
                         if idx > 0:
                             stats.hedge_wins += 1
+                            trace.event("hedge.win", tier="remote",
+                                        nbytes=r.nbytes,
+                                        attrs={"key": r.key})
                         if not deliver(r, data):
                             budget.sub(r.nbytes)
                     # else: losing hedge attempt landed late — discard
-                now = time.perf_counter()
+                now = trace.clock()
                 for r in active.values():
                     if now >= r.deadline \
                             and r.attempts <= self.cfg.max_hedges:
@@ -546,12 +560,12 @@ class RangeScheduler:
             budget.settle()
             raise
         finally:
-            stats.seconds = time.perf_counter() - t0
+            stats.seconds = trace.clock() - t0
             stats.peak_staged_bytes = budget.peak
         return stats
 
     def _next_deadline(self, active) -> float:
-        now = time.perf_counter()
+        now = trace.clock()
         cands = [r.deadline - now for r in active.values()
                  if r.attempts <= self.cfg.max_hedges]
         # cap the wait so reclaim/demand/cancel are re-polled promptly even
@@ -748,7 +762,13 @@ class RemoteTier:
         step unpublished and every already-shipped object unreferenced
         (and reusable by the next attempt)."""
         from .checkpoint import step_dir_name
-        t0 = time.perf_counter()
+        t0 = trace.clock()
+        with trace.span("upload", tier="remote", attrs={"step": step}):
+            return self._upload_step_traced(local_root, step, t0)
+
+    def _upload_step_traced(self, local_root: str, step: int,
+                            t0: float) -> UploadStats:
+        from .checkpoint import step_dir_name
         src_dir = os.path.join(local_root, step_dir_name(step))
         manifest = Manifest.load(src_dir)
         step_key = self.step_key(step)
@@ -781,7 +801,9 @@ class RemoteTier:
             key, path = item
             with open(path, "rb") as f:
                 data = f.read()
-            self.store.put(key, data)
+            with trace.span("remote.put", tier="remote", nbytes=len(data),
+                            attrs={"key": key}):
+                self.store.put(key, data)
             return len(data)
 
         if self.cfg.put_workers > 1 and len(puts) > 1:
@@ -796,7 +818,7 @@ class RemoteTier:
         stats.bytes += ship((join_key(step_key, MANIFEST_NAME),
                              manifest_file))
         stats.objects = len(puts) + 1
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         return stats
 
 

@@ -38,11 +38,10 @@ from __future__ import annotations
 
 import os
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 
-from . import faults
+from . import faults, trace
 from .aggregation import Extent, chunk_extents
 from .buffers import (AlignedBuffer, BufferPool, PAGE, StageBudget, align_up,
                       aligned_span)
@@ -196,6 +195,7 @@ class TieredTransferEngine:
             else:
                 self._read_io = self._make_engine("read")
                 self._write_io = self._make_engine("write")
+                self._write_io.tier = "level1"   # spans land on the L1 track
                 self.engines_built += 2
                 # hedged attempts must tolerate one attempt failing while
                 # its sibling succeeds — errors arrive as Completion.error
@@ -224,8 +224,15 @@ class TieredTransferEngine:
             return self._execute_locked(ranges, files)
 
     def _execute_locked(self, ranges, files: int) -> TransferStats:
+        total = sum(end - start for _s, _d, _sz, iv in ranges
+                    for start, end in iv)
+        with trace.span("tier.transfer", tier="level1", nbytes=total,
+                        attrs={"files": files}):
+            return self._execute_traced(ranges, files)
+
+    def _execute_traced(self, ranges, files: int) -> TransferStats:
         stats = TransferStats(backend=self.backend, files=files)
-        t0 = time.perf_counter()
+        t0 = trace.clock()
         segments: list[_Segment] = []
         src_fds: list[int] = []
         dst_fds: list[int] = []
@@ -272,7 +279,7 @@ class TieredTransferEngine:
             self._spawn_janitor(read_io, write_io, *orphans)
         stats.read_stats = read_io.stats
         stats.write_stats = write_io.stats
-        stats.seconds = time.perf_counter() - t0
+        stats.seconds = trace.clock() - t0
         self.last_stats = stats
         return stats
 
@@ -283,7 +290,7 @@ class TieredTransferEngine:
         self._read_io = self._write_io = None
 
         def drain(io: IOEngine, deadline: float) -> bool:
-            while io.inflight and time.perf_counter() < deadline:
+            while io.inflight and trace.clock() < deadline:
                 try:
                     io.poll(min_n=1, timeout_s=0.1)
                 # crlint: allow(CRL005): draining losing hedge attempts —
@@ -293,7 +300,7 @@ class TieredTransferEngine:
             return not io.inflight
 
         def janitor():
-            deadline = time.perf_counter() + 60.0
+            deadline = trace.clock() + 60.0
             ok = drain(read_io, deadline) and drain(write_io, deadline)
             if ok:
                 # no attempt references the buffers or fds anymore: release
@@ -331,7 +338,7 @@ class TieredTransferEngine:
             yield _Segment(path, e.offset, e.nbytes, src_fd, dst_fd)
 
     def _stage_deadline(self, nbytes: int) -> float:
-        return time.perf_counter() + max(self.hedge_after_s,
+        return trace.clock() + max(self.hedge_after_s,
                                          nbytes / self.min_bw_bytes_s)
 
     def _run(self, segments: list[_Segment], read_io: IOEngine,
@@ -420,6 +427,11 @@ class TieredTransferEngine:
                 return
             if c.user_data != seg.primary_read:
                 stats.hedge_wins += 1
+                trace.event("hedge.win", tier="level1", nbytes=seg.nbytes,
+                            attrs={"op": "read"})
+            elif seg.hedged_read:
+                trace.event("hedge.lose", tier="level1",
+                            attrs={"op": "read"})
             forgive_stragglers(seg, c.user_data)
             seg.buf = buf
             issue_write(seg)
@@ -438,6 +450,11 @@ class TieredTransferEngine:
             if seg.state == "writing":     # first completion wins
                 if c.user_data != seg.primary_write:
                     stats.hedge_wins += 1
+                    trace.event("hedge.win", tier="level1",
+                                nbytes=seg.nbytes, attrs={"op": "write"})
+                elif seg.hedged_write:
+                    trace.event("hedge.lose", tier="level1",
+                                attrs={"op": "write"})
                 seg.state = "done"
                 stats.bytes += seg.nbytes
                 active.discard(seg)
@@ -450,21 +467,25 @@ class TieredTransferEngine:
                 release_seg_buf(seg)       # safe: no attempt references it
 
         def maybe_hedge():
-            now = time.perf_counter()
+            now = trace.clock()
             for seg in active:
                 if now < seg.deadline:
                     continue
                 if seg.state == "reading" and not seg.hedged_read:
                     seg.hedged_read = True
                     stats.hedged += 1
+                    trace.event("hedge.issue", tier="level1",
+                                nbytes=seg.nbytes, attrs={"op": "read"})
                     issue_read(seg, hedge=True)
                 elif seg.state == "writing" and not seg.hedged_write:
                     seg.hedged_write = True
                     stats.hedged += 1
+                    trace.event("hedge.issue", tier="level1",
+                                nbytes=seg.nbytes, attrs={"op": "write"})
                     issue_write(seg, hedge=True)
 
         def next_deadline() -> float:
-            now = time.perf_counter()
+            now = trace.clock()
             cands = [seg.deadline - now for seg in active
                      if not (seg.hedged_read if seg.state == "reading"
                              else seg.hedged_write)]

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import (CheckpointManager, EngineConfig,
                         MultiLevelCheckpointer, MultiWriterCheckpointer)
+from repro.core import trace
 from repro.data import DataConfig, SyntheticPipeline
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
@@ -46,6 +47,8 @@ class TrainerConfig:
     keep: int = 3
     log_every: int = 10
     seed: int = 0
+    trace: bool = False                  # span tracer on for the whole run
+    trace_dir: str = ""                  # Perfetto + .prom exports land here
 
 
 class Trainer:
@@ -91,6 +94,14 @@ class Trainer:
         else:
             self.ckpt = None
         self.metrics_log: list[dict] = []
+        # one queryable tree over every Stats producer in the stack
+        self.registry = trace.MetricsRegistry()
+        if self.ckpt is not None:
+            self.registry.register(
+                "save", lambda: getattr(self.ckpt, "last_save_metrics", None))
+            self.registry.register(
+                "restore",
+                lambda: getattr(self.ckpt, "last_restore_metrics", None))
 
     # ------------------------------------------------------------------ state
     def init_state(self):
@@ -116,6 +127,23 @@ class Trainer:
 
     # ------------------------------------------------------------------ run
     def run(self) -> dict:
+        if self.tcfg.trace:
+            trace.enable()
+        try:
+            return self._run_traced()
+        finally:
+            if self.tcfg.trace:
+                self._export_trace()
+                trace.disable()
+
+    def _export_trace(self) -> None:
+        import os
+        d = self.tcfg.trace_dir or self.tcfg.ckpt_dir
+        os.makedirs(d, exist_ok=True)
+        trace.export_perfetto(os.path.join(d, "trace.json"))
+        trace.export_prometheus(os.path.join(d, "metrics.prom"))
+
+    def _run_traced(self) -> dict:
         state, shardings = self.init_state()
         step_fn = make_train_step(self.cfg, self.opt_cfg)
         if self.mesh is not None:
@@ -181,10 +209,16 @@ class Trainer:
         wall = time.perf_counter() - t_start
         if self.ckpt is not None:
             self.ckpt.wait()
-        return {"state": state, "wall_seconds": wall,
-                "ckpt_blocking_seconds": ckpt_block_s,
-                "ckpt_blocking_reported_s": ckpt_reported_block_s,
-                "metrics": self.metrics_log, **restore_attr}
+        out = {"state": state, "wall_seconds": wall,
+               "ckpt_blocking_seconds": ckpt_block_s,
+               "ckpt_blocking_reported_s": ckpt_reported_block_s,
+               "metrics": self.metrics_log, **restore_attr}
+        if trace.is_enabled():
+            rep = trace.stall_report(root="save")
+            if rep is not None:
+                out["stall_report"] = rep.attribution
+                out["stall_wall_seconds"] = rep.wall
+        return out
 
     def _latest(self):
         try:

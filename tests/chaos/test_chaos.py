@@ -368,3 +368,48 @@ def test_prefetch_promote_crash_never_loses_previous_copy(tmp_path):
         asides
         and (asides[0] / "sentinel.bin").read_bytes() == b"previous-version"
     ), "crash mid-promote lost BOTH the old and the new copy"
+
+
+# ------------------------------------------------------------- trace forensics
+def test_violation_dump_contains_injected_fault_event(tmp_path, monkeypatch):
+    """A broken invariant keeps the trial dir AND drops a Perfetto
+    trace.json beside it whose events include every injected fault —
+    op kind, action, and target path (DESIGN.md §17)."""
+    import json
+    import random
+
+    def boom(t, stats):
+        mgr = CheckpointManager(t.root, engine="aggregated", config=_cfg(),
+                                async_save=False, keep=2)
+        plan = faults.FaultPlan([faults.Fault(faults.OP_RENAME, at=1,
+                                              action=faults.A_ERRNO,
+                                              err=errno.ENOSPC)])
+        try:
+            with faults.inject(plan):
+                try:
+                    mgr.save(1, _state())
+                except OSError:
+                    pass
+        finally:
+            mgr.close()
+        assert plan.fired
+        t.fault_desc = plan.fired[0]
+        t.die("forced violation for the forensics dump")
+
+    monkeypatch.setattr(chaos, "_trial_single", boom)
+    stats = chaos.CampaignStats(seed=0)
+    with pytest.raises(chaos.InvariantViolation):
+        chaos.run_trial("solo", random.Random(0), str(tmp_path), stats)
+    kept = [d for d in tmp_path.iterdir() if d.is_dir()]
+    assert len(kept) == 1, "violation must keep the trial dir"
+    doc = json.loads((kept[0] / "trace.json").read_text())
+    fired = [e for e in doc["traceEvents"]
+             if e.get("ph") == "i" and e.get("name") == "fault.injected"]
+    assert fired, "the injected fault never became a trace event"
+    args = fired[0]["args"]
+    assert args["op"] == faults.OP_RENAME
+    assert args["action"] == faults.A_ERRNO
+    assert args["path"], "rename faults must carry the target path"
+    # the save's spans ride in the same dump: forensics sees the timeline
+    spans = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+    assert "save" in spans

@@ -1,0 +1,27 @@
+# crlint: fixture
+"""CRL006 canary — un-epoched clocks fragmenting the trace epoch."""
+import os
+import time
+from time import perf_counter as pc
+
+
+def measure() -> float:
+    t0 = time.perf_counter()                 # CRL006: use trace.clock()
+    return time.perf_counter() - t0          # CRL006: use trace.clock()
+
+
+def stamp() -> float:
+    return time.time()                       # CRL006: un-annotated wall clock
+
+
+def deadline(timeout: float) -> float:
+    return time.monotonic() + timeout        # CRL006: use trace.clock()
+
+
+def aliased() -> float:
+    return pc()                              # CRL006: from-import alias
+
+
+def mtime_age(path: str) -> float:
+    # crlint: allow(CRL006): mtime comparison needs the wall clock
+    return time.time() - os.path.getmtime(path)

@@ -73,6 +73,19 @@ def test_swallowed_faults_flagged(findings):
                                       "absorb_injected_errno"}
 
 
+def test_unepoched_clocks_flagged(findings):
+    got = _by(findings, "bad_clock.py")
+    assert [f.checker for f in got] == ["CRL006"] * 5
+    assert {f.scope for f in got} == {"measure", "stamp", "deadline",
+                                      "aliased"}
+    assert all("trace.clock()" in f.message for f in got)
+    assert any(f.symbol == "time.perf_counter" for f in got)
+    assert any(f.symbol == "time.time" for f in got)
+    assert any(f.symbol == "time.monotonic" for f in got)
+    # the annotated mtime comparison is NOT flagged
+    assert not any(f.scope == "mtime_age" for f in got)
+
+
 # -------------------------------------------------------- must NOT flag
 def test_clean_twin_passes(findings):
     assert _by(findings, "clean_core.py") == []

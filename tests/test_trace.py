@@ -1,0 +1,214 @@
+"""core.trace — span nesting/parenting across threads, the disabled-mode
+no-op fast path, drop-oldest ring overflow, Perfetto export round-trips,
+and the MetricsRegistry's live (non-copying) adaptation of the stack's
+Stats dataclasses (DESIGN.md §17)."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import trace
+from repro.core.checkpoint import RestoreMetrics, SaveMetrics
+from repro.core.remote import RangeStats
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tracer():
+    trace.disable()
+    yield
+    trace.disable()
+
+
+# ------------------------------------------------------------------ spans
+def test_span_nesting_and_parenting_across_threads():
+    trace.enable()
+    with trace.span("outer"):
+        with trace.span("inner"):
+            pass
+
+    def worker():
+        with trace.span("outer_t2"):
+            with trace.span("inner_t2"):
+                pass
+
+    th = threading.Thread(target=worker, name="trace-worker")
+    th.start()
+    th.join()
+    by = {e.name: e for e in trace.drain()}
+    assert by["inner"].parent_id == by["outer"].span_id
+    assert by["outer"].parent_id == 0
+    # each thread keeps its own stack: no cross-thread auto-parenting
+    assert by["outer_t2"].parent_id == 0
+    assert by["inner_t2"].parent_id == by["outer_t2"].span_id
+    assert by["inner_t2"].tid != by["inner"].tid
+    assert by["inner_t2"].thread == "trace-worker"
+    # timestamps nest
+    assert by["outer"].t0 <= by["inner"].t0 <= by["inner"].t1 <= by["outer"].t1
+
+
+def test_explicit_parent_links_across_threads():
+    trace.enable()
+    with trace.span("root") as root:
+        root_id = root.id
+
+        def worker():
+            with trace.span("cross", parent=root_id):
+                pass
+
+        th = threading.Thread(target=worker)
+        th.start()
+        th.join()
+    by = {e.name: e for e in trace.drain()}
+    assert by["cross"].parent_id == root_id
+
+
+def test_complete_records_pre_timed_span():
+    trace.enable()
+    t0 = trace.clock()
+    time.sleep(0.001)
+    trace.complete("io.write", t0, tier="level0", nbytes=4096)
+    (ev,) = trace.drain()
+    assert ev.name == "io.write" and ev.tier == "level0"
+    assert ev.nbytes == 4096 and ev.t1 >= ev.t0 == t0
+
+
+# ------------------------------------------------------ disabled fast path
+def test_disabled_fast_path_is_shared_noop():
+    assert not trace.is_enabled()
+    s1 = trace.span("a", tier="level0", nbytes=123)
+    s2 = trace.span("b")
+    # one shared singleton: the disabled path allocates nothing per call
+    assert s1 is s2 is trace._NOOP
+    with s1:
+        pass
+    trace.event("x", attrs={"k": "v"})
+    trace.count("c", 2.0)
+    trace.observe("h", 0.5)
+    trace.complete("y", 0.0, 1.0)
+    assert trace.drain() == []
+    assert trace.dropped_events() == 0
+    assert trace.stall_report(root="save") is None
+
+
+# ------------------------------------------------------------ ring overflow
+def test_ring_overflow_drops_oldest_with_counter():
+    trace.enable(capacity=8)
+    for i in range(20):
+        trace.event(f"e{i}")
+    evs = trace.drain()
+    assert [e.name for e in evs] == [f"e{i}" for i in range(12, 20)]
+    assert trace.dropped_events() == 12
+    # drops are per-thread: a fresh thread's ring starts clean
+    def worker():
+        trace.event("t2")
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    assert trace.dropped_events() == 12
+    assert any(e.name == "t2" for e in trace.drain())
+
+
+# ---------------------------------------------------------- perfetto export
+def test_perfetto_export_round_trips(tmp_path):
+    trace.enable()
+    with trace.span("save", tier="host", nbytes=96 << 20,
+                    attrs={"step": 7}):
+        with trace.span("flush", tier="level0"):
+            trace.event("hedge.issue", tier="level1",
+                        attrs={"path": "data.bin"})
+    path = tmp_path / "trace.json"
+    trace.export_perfetto(str(path))
+    doc = json.loads(path.read_text())
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert {e["name"] for e in xs} == {"save", "flush"}
+    by = {e["name"]: e for e in xs}
+    # microsecond timestamps, monotonically consistent nesting
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    assert by["save"]["ts"] <= by["flush"]["ts"]
+    assert (by["flush"]["ts"] + by["flush"]["dur"]
+            <= by["save"]["ts"] + by["save"]["dur"] + 1.0)
+    assert by["save"]["args"]["step"] == 7
+    assert by["save"]["args"]["bytes"] == 96 << 20
+    # spans land on tier-named tracks; instants ride along
+    procs = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert {"tier:host", "tier:level0", "tier:level1"} <= procs
+    insts = [e for e in doc["traceEvents"] if e.get("ph") == "i"]
+    assert [e["name"] for e in insts] == ["hedge.issue"]
+    assert insts[0]["args"]["path"] == "data.bin"
+
+
+def test_prometheus_export_textfile(tmp_path):
+    trace.enable()
+    trace.count("faults_injected", 3)
+    with trace.span("flush", tier="level0"):
+        pass
+    text = trace.export_prometheus(str(tmp_path / "metrics.prom"))
+    assert (tmp_path / "metrics.prom").read_text() == text
+    assert "crtrace_faults_injected 3" in text
+    assert "crtrace_trace_dropped_events 0" in text
+    assert 'crtrace_span_seconds_flush_bucket{tier="level0",le="+Inf"} 1' \
+        in text
+    assert "crtrace_span_seconds_flush_count" in text
+
+
+# --------------------------------------------------------- metrics registry
+def test_registry_adapts_stats_without_copying_semantics_drift():
+    sm = SaveMetrics(step=3)
+    rm = RestoreMetrics(step=3)
+    rs = RangeStats()
+    reg = trace.MetricsRegistry()
+    reg.register("save", sm)
+    reg.register("restore", lambda: rm)      # callables resolve per snapshot
+    reg.register("range", rs)
+    snap1 = reg.snapshot()
+    assert snap1["save"]["written_bytes"] == 0
+    # mutate AFTER registration: the registry holds the live object
+    sm.written_bytes = 123
+    sm.total_bytes = 2_000_000_000
+    sm.flush_seconds = 2.0
+    rm.read_seconds = 1.0
+    rm.decode_seconds = 0.5
+    rs.range_seconds.append(0.25)
+    snap2 = reg.snapshot()
+    assert snap2["save"]["written_bytes"] == 123
+    assert snap2["range"]["range_seconds"] == [0.25]
+    # @property views are computed at snapshot time, not frozen
+    assert snap2["save"]["flush_gbps"] == pytest.approx(1.0)
+    assert snap2["restore"]["stage_seconds"] == pytest.approx(1.5)
+    assert reg.query("save.flush_gbps") == pytest.approx(1.0)
+    # the snapshot is detached: mutating it never writes back to the source
+    snap2["range"]["range_seconds"].append(9.9)
+    snap2["save"]["written_bytes"] = -1
+    assert rs.range_seconds == [0.25]
+    assert sm.written_bytes == 123
+    with pytest.raises(KeyError):
+        reg.query("save.no_such_field")
+
+
+# ------------------------------------------------------------- stall report
+def test_stall_report_attribution_sums_to_wall():
+    trace.enable()
+    with trace.span("save", nbytes=1 << 20):
+        with trace.span("extract"):           # d2h
+            time.sleep(0.004)
+        with trace.span("fingerprint"):       # uncategorized -> compute
+            time.sleep(0.002)
+        with trace.span("flush", tier="level0"):
+            with trace.span("budget.wait"):   # stage wait inside the flush
+                time.sleep(0.002)
+            time.sleep(0.004)
+    rep = trace.stall_report(root="save")
+    assert rep is not None
+    assert set(rep.attribution) == set(trace.CATEGORIES)
+    assert sum(rep.attribution.values()) == pytest.approx(rep.wall, rel=1e-6)
+    assert rep.attribution["d2h"] >= 0.003
+    assert rep.attribution["stage_wait"] >= 0.001
+    # the nested wait is NOT double-counted into the flush
+    assert rep.attribution["level0_write"] >= 0.003
+    assert rep.wall >= 0.011
+    out = rep.render()
+    assert "top bottleneck" in out and "save" in out
